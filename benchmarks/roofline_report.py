@@ -1,0 +1,64 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+COLS = ("arch", "shape", "mesh", "chips", "dominant", "compute_s",
+        "memory_s", "collective_s", "roofline_bound_s", "roofline_fraction",
+        "useful_flop_ratio", "temp_gb", "args_gb")
+
+
+def load_rows(mesh: str = None):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "skipped": r["skipped"]})
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "chips": r["chips"], "dominant": rl["dominant"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "roofline_bound_s": rl["roofline_bound_s"],
+            "roofline_fraction": rl["roofline_fraction"],
+            "useful_flop_ratio": rl["useful_flop_ratio"],
+            "temp_gb": m.get("temp_size_in_bytes", 0) / 1e9,
+            "args_gb": m.get("argument_size_in_bytes", 0) / 1e9,
+            "collectives": rl.get("collectives", {}),
+        })
+    return rows
+
+
+def fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main() -> None:
+    rows = load_rows()
+    if not rows:
+        print("roofline_report: no dry-run results yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return
+    print(",".join(COLS))
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},SKIPPED:"
+                  f" {r['skipped']}")
+        else:
+            print(",".join(fmt(r.get(c, "")) for c in COLS))
+
+
+if __name__ == "__main__":
+    main()

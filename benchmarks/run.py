@@ -1,0 +1,94 @@
+"""Benchmark driver: one section per paper table + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+
+* table2_setup       — paper Table II (scenario/launch accounting)
+* table3_strategies  — paper Table III (S1/S2/S3 strategy sweep, wall time)
+* portability        — Kokkos-vs-native analogue (Pallas vs XLA)
+* serving_aggregation— request-level strategy-3 (engine throughput sweep)
+* roofline_report    — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+
+def serving_aggregation(quick: bool = False):
+    """Throughput of the serving engine vs aggregation bucket cap."""
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.configs.base import AggregationConfig
+    from repro.models import model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(get_config("granite-8b"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 8 if quick else 24
+    rows = []
+    for cap in (1, 4, 8):
+        agg = AggregationConfig(max_aggregated=cap,
+                                buckets=tuple(b for b in (1, 2, 4, 8)
+                                              if b <= cap))
+        eng = ServingEngine(cfg, params, max_batch=cap, max_len=64, agg=agg)
+        reqs = [Request(i, [i % 7 + 1, 3], max_new_tokens=8)
+                for i in range(n_req)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()          # includes compile; warm pass below
+        eng2 = ServingEngine(cfg, params, max_batch=cap, max_len=64, agg=agg)
+        eng2._decode = eng._decode          # reuse compiled buckets
+        reqs = [Request(i, [i % 7 + 1, 3], max_new_tokens=8)
+                for i in range(n_req)]
+        for r in reqs:
+            eng2.submit(r)
+        t0 = time.perf_counter()
+        eng2.run()
+        dt = time.perf_counter() - t0
+        rows.append({"max_batch": cap,
+                     "tokens_per_s": round(eng2.stats["tokens"] / dt, 1),
+                     "launches": eng2.stats["launches"],
+                     "tokens": eng2.stats["tokens"]})
+        print(f"  engine cap={cap}: {rows[-1]['tokens_per_s']} tok/s, "
+              f"{rows[-1]['launches']} launches")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    print(f"== benchmarks (backend={jax.default_backend()}, "
+          f"devices={len(jax.devices())}) ==")
+
+    print("\n-- table2_setup (paper Table II) --")
+    from benchmarks import table2_setup
+    table2_setup.main()
+
+    print("\n-- table3_strategies (paper Table III) --")
+    from benchmarks import table3_strategies
+    sys.argv = ["table3"] + (["--quick"] if args.quick else []) \
+        + (["--full"] if args.full else [])
+    table3_strategies.main()
+
+    print("\n-- portability (Kokkos-vs-native analogue) --")
+    from benchmarks import portability
+    portability.main()
+
+    print("\n-- serving aggregation (request-level strategy 3) --")
+    serving_aggregation(quick=args.quick)
+
+    print("\n-- roofline report (from dry-run artifacts) --")
+    from benchmarks import roofline_report
+    roofline_report.main()
+
+    print("\nall benchmarks done")
+
+
+if __name__ == "__main__":
+    main()

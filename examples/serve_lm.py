@@ -1,0 +1,60 @@
+"""Serve a small model with batched requests through the aggregation engine.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch granite-8b --requests 16
+
+Demonstrates the paper's strategy 3 at the serving layer: requests arrive as
+fine-grained decode tasks; the engine fuses active requests into bucketed
+batched kernels (continuous batching), and reports the aggregation histogram
+— how many kernels ran at each bucket size.
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch, max_len=64)
+
+    reqs = [Request(i, [(3 * i + 1) % cfg.vocab_size,
+                        (5 * i + 2) % cfg.vocab_size],
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    # staggered arrival: half now, half mid-flight (continuous batching)
+    for r in reqs[: len(reqs) // 2]:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        eng.step()
+    for r in reqs[len(reqs) // 2:]:
+        eng.submit(r)
+    eng.run()
+    wall = time.perf_counter() - t0
+
+    done = sum(r.done for r in reqs)
+    print(f"arch={cfg.name} requests={done}/{len(reqs)} "
+          f"tokens={eng.stats['tokens']}")
+    print(f"throughput : {eng.stats['tokens'] / wall:.1f} tok/s "
+          f"(CPU, reduced config)")
+    print(f"launches   : {eng.stats['launches']} aggregated kernels "
+          f"(vs {eng.stats['tokens']} unaggregated)")
+    print(f"buckets    : {eng.stats['aggregated_hist']}")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.ckpt import (
+    save_checkpoint, restore_checkpoint, latest_step, restore_resharded,
+)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "restore_resharded"]

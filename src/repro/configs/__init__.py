@@ -1,0 +1,84 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+One module per assigned architecture (public-literature configs), plus the
+paper's own Sedov hydro scenario.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ALL_SHAPES, SHAPES_BY_NAME, AggregationConfig, HydroConfig, ModelConfig,
+    ParallelConfig, ShapeConfig, shape_applicable,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+)
+
+from repro.configs.starcoder2_15b import CONFIG as starcoder2_15b
+from repro.configs.granite_8b import CONFIG as granite_8b
+from repro.configs.qwen1_5_32b import CONFIG as qwen1_5_32b
+from repro.configs.h2o_danube_1_8b import CONFIG as h2o_danube_1_8b
+from repro.configs.dbrx_132b import CONFIG as dbrx_132b
+from repro.configs.qwen2_moe_a2_7b import CONFIG as qwen2_moe_a2_7b
+from repro.configs.xlstm_125m import CONFIG as xlstm_125m
+from repro.configs.seamless_m4t_large_v2 import CONFIG as seamless_m4t_large_v2
+from repro.configs.zamba2_2_7b import CONFIG as zamba2_2_7b
+from repro.configs.llama_3_2_vision_90b import CONFIG as llama_3_2_vision_90b
+from repro.configs.sedov import CONFIG as sedov, CONFIG_16 as sedov_16
+
+ARCHS = {
+    c.name: c for c in (
+        starcoder2_15b, granite_8b, qwen1_5_32b, h2o_danube_1_8b,
+        dbrx_132b, qwen2_moe_a2_7b, xlstm_125m, seamless_m4t_large_v2,
+        zamba2_2_7b, llama_3_2_vision_90b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    for cfg in ARCHS.values():
+        if cfg.name == name or cfg.name.replace("-", "_").replace(".", "_") == key:
+            return cfg
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a config to a CPU-smoke-testable size, preserving family
+    structure (MoE stays MoE with fewer experts, hybrid keeps its period,
+    enc-dec keeps both stacks, ...)."""
+    kw = dict(
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        remat=False,
+        dtype="float32",
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=min(cfg.top_k, 2),
+                  n_shared_experts=min(cfg.n_shared_experts, 1),
+                  shared_expert_d_ff=128 if cfg.shared_expert_d_ff else 0,
+                  d_ff=64)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_chunk=16)
+    if cfg.slstm_every:
+        kw.update(slstm_every=2)
+    if cfg.shared_attn_every:
+        kw.update(shared_attn_every=2, n_layers=4)
+    if cfg.n_encoder_layers:
+        kw.update(n_encoder_layers=2)
+    if cfg.cross_attn_every:
+        kw.update(cross_attn_every=2, n_layers=4, vision_tokens=8)
+    if cfg.sliding_window:
+        kw.update(sliding_window=8)
+    return cfg.replace(**kw)
+
+
+__all__ = [
+    "ARCHS", "get_config", "reduced",
+    "ModelConfig", "ShapeConfig", "ParallelConfig", "AggregationConfig",
+    "HydroConfig", "ALL_SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "sedov", "sedov_16",
+]

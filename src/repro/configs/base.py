@@ -1,0 +1,225 @@
+"""Config dataclasses for models, shapes, parallelism and aggregation.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the paper's own
+hydro scenario is a ``HydroConfig``.  ``ShapeConfig`` captures the assigned
+(seq_len, global_batch, kind) cells.  ``reduced()`` shrinks any ModelConfig to
+a CPU-smoke-testable size while preserving the family-specific structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | encdec | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    sliding_window: int = 0           # 0 -> full attention; >0 -> SWA (h2o-danube)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    shared_expert_d_ff: int = 0       # qwen2-moe shared expert width
+    # --- SSM / xLSTM / Mamba2 ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 256              # chunked-scan block size (S1 knob)
+    slstm_every: int = 0              # xlstm: every k-th block is sLSTM
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0        # one shared attn+MLP block every k layers
+    # --- enc-dec (seamless backbone) ---
+    n_encoder_layers: int = 0
+    encoder_seq_ratio: int = 1        # encoder frames per decoder token (stub)
+    # --- vlm ---
+    cross_attn_every: int = 0         # every k-th layer is an image cross-attn layer
+    vision_tokens: int = 0            # stub patch-embedding count
+    mlp_gated: bool = True            # SwiGLU (3 mats) vs plain MLP (2 mats)
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for 6ND model flops) ----------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count; active_only counts routed experts
+        at top_k/n_experts utilisation (MoE active params)."""
+        d, h = self.d_model, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        attn = d * (nq * h) + 2 * d * (nkv * h) + (nq * h) * d
+        n_ff_mats = 3 if self.mlp_gated else 2
+        if self.family in ("ssm", "hybrid"):
+            # mamba2 / mLSTM block: in_proj (2*expand*d + extras) + out_proj
+            inner = self.ssm_expand * d
+            mixer = d * (2 * inner + 2 * self.ssm_state + self.n_heads) + inner * d
+        else:
+            mixer = attn
+        if self.n_experts:
+            ff_one = n_ff_mats * d * self.d_ff              # SwiGLU expert
+            routed = self.n_experts * ff_one
+            if active_only:
+                routed = self.top_k * ff_one
+            shared = self.n_shared_experts * n_ff_mats * d * (self.shared_expert_d_ff or self.d_ff)
+            ff = routed + shared + d * self.n_experts       # router
+        elif self.d_ff:
+            ff = n_ff_mats * d * self.d_ff
+        else:
+            ff = 0
+        if self.shared_attn_every:
+            # zamba2: FFN lives only in the *shared* attn+MLP block (1 copy).
+            total = self.n_layers * (mixer + 2 * d) + (attn + ff + 2 * d)
+        else:
+            per_layer = mixer + ff + 2 * d
+            total = self.n_layers * per_layer
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (attn + ff + 2 * d)
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Shape cells
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a shape cell applies to an architecture (per spec rules)."""
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or cfg.sliding_window > 0
+        )
+        if not sub_quadratic:
+            return False, "pure full-attention arch: 500k dense-KV decode excluded per spec"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / aggregation configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How to map a model onto the mesh (axes: optional pod, data, model)."""
+    fsdp: bool = True                 # shard params/opt-state over data axis
+    tensor_parallel: bool = True      # shard heads/ffn over model axis
+    expert_parallel: bool = True      # shard MoE experts over model axis
+    sequence_parallel: bool = False   # shard long sequences over data axis
+    remat_policy: str = "dots"        # "none" | "dots" | "full"
+    grad_compression: str = "none"    # "none" | "int8"
+    microbatch: int = 0               # 0 -> no gradient accumulation
+
+
+@dataclass(frozen=True)
+class AggregationConfig:
+    """The paper's three strategies, expressed as runtime knobs.
+
+    strategy 1: ``subgrid_size`` (hydro) / ``ssm_chunk`` / microbatch (LM)
+    strategy 2: ``n_executors``  — concurrent small launches
+    strategy 3: ``max_aggregated`` — on-the-fly fusion cap (bucketed)
+    """
+    strategy: str = "s3"              # "s1" | "s2" | "s3" | "s2+s3"
+    n_executors: int = 1
+    max_aggregated: int = 32
+    buckets: Tuple[int, ...] = ()     # () -> powers of two up to max_aggregated
+    launch_watermark: int = 1         # queue depth that forces a launch
+
+    def bucket_sizes(self) -> Tuple[int, ...]:
+        if self.buckets:
+            return self.buckets
+        out, b = [], 1
+        while b < self.max_aggregated:
+            out.append(b)
+            b *= 2
+        out.append(self.max_aggregated)
+        return tuple(dict.fromkeys(out))
+
+
+# ---------------------------------------------------------------------------
+# Hydro (paper scenario) config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HydroConfig:
+    """Octo-Tiger-style Sedov blast-wave scenario (paper Table II)."""
+    name: str = "sedov"
+    subgrid: int = 8                  # cells per edge (strategy-1 knob)
+    ghost: int = 3                    # ghost-layer thickness (PPM needs 3)
+    levels: int = 3                   # octree levels with AMR off
+    n_fields: int = 5                 # rho, Sx, Sy, Sz, E
+    gamma: float = 7.0 / 5.0
+    cfl: float = 0.4
+    blast_energy: float = 1.0
+    rho0: float = 1.0
+    domain: float = 1.0               # cube edge length
+    # paper runs double precision on GPU; the TPU adaptation uses fp32
+    # (conservation still holds to fp32 machine precision — tests enforce)
+    dtype: str = "float32"
+
+    @property
+    def grids_per_edge(self) -> int:
+        # AMR off: full octree with `levels` refinement levels below the root
+        # has 2^levels leaf sub-grids per edge.  Paper Table II: 3 levels of
+        # 8^3 grids -> 512 leaves; 2 levels of 16^3 -> 64 leaves (same cells).
+        return 2 ** self.levels
+
+    @property
+    def n_subgrids(self) -> int:
+        return self.grids_per_edge ** 3
+
+    @property
+    def cells_total(self) -> int:
+        return self.n_subgrids * self.subgrid ** 3
+
+    @property
+    def padded(self) -> int:
+        return self.subgrid + 2 * self.ghost
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ParallelConfig", "AggregationConfig",
+    "HydroConfig", "ALL_SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

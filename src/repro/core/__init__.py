@@ -1,0 +1,19 @@
+"""The paper's primary contribution: task-based work aggregation for TPU.
+
+* ``executor``    — device executors + pre-allocated pool (streams analogue)
+* ``buffers``     — recycled staging slabs (CPPuddle allocator analogue)
+* ``aggregation`` — the on-the-fly explicit work-aggregation executor (S3)
+* ``strategies``  — S1/S2/S3/fused strategy runners over the hydro tasks
+"""
+from repro.core.aggregation import (
+    AggregationExecutor, TaskFuture, aggregation_region, reset_regions,
+)
+from repro.core.buffers import DEFAULT_POOL, BufferPool
+from repro.core.executor import DeviceExecutor, ExecutorPool
+from repro.core.strategies import HydroStrategyRunner, xla_task_body
+
+__all__ = [
+    "AggregationExecutor", "TaskFuture", "aggregation_region", "reset_regions",
+    "BufferPool", "DEFAULT_POOL", "DeviceExecutor", "ExecutorPool",
+    "HydroStrategyRunner", "xla_task_body",
+]

@@ -1,0 +1,203 @@
+"""The paper's strategy 3: on-the-fly explicit work aggregation, TPU-native.
+
+Fine-grained tasks submit "launch kernel K on my inputs" requests.  While the
+underlying executor is busy, compatible submissions accumulate; when it
+becomes idle — or the ``max_aggregated`` cap is reached — the queued tasks
+are fused into ONE batched kernel launch over a slot axis.  Each task gets a
+future resolving to its slot of the batched output.
+
+TPU adaptation (DESIGN.md §2): XLA requires static shapes, so a dynamic
+aggregation count is realized as a small set of pre-compiled *buckets*
+(powers of two up to the cap).  A queue of length k is drained greedily with
+the largest bucket <= k; because bucket 1 exists, no padding is ever needed
+and results are *bit-identical* to unaggregated execution (the equivalence
+invariant tested in tests/test_aggregation.py).
+
+The paper's "Single-GPU-workload-Multiple-Tasks" constraint (all aggregated
+tasks execute the same allocation/launch sequence) is enforced *statically*
+here: the bucketed kernel is one traced function extended over the slot axis,
+so divergence between aggregated tasks is impossible by construction.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AggregationConfig
+from repro.core.buffers import DEFAULT_POOL, BufferPool
+from repro.core.executor import DeviceExecutor, ExecutorPool
+
+
+class TaskFuture:
+    """HPX-future analogue: resolves to one task's slice of a batched launch."""
+
+    __slots__ = ("_value", "_batch", "_slot", "_done")
+
+    def __init__(self):
+        self._value = None
+        self._batch = None
+        self._slot = -1
+        self._done = False
+
+    def _fulfil(self, batch_out: Any, slot: int) -> None:
+        self._batch, self._slot, self._done = batch_out, slot, True
+
+    def ready(self) -> bool:
+        return self._done
+
+    def result(self) -> Any:
+        if not self._done:
+            raise RuntimeError("task not launched yet — call executor.flush()")
+        if self._value is None:
+            slot = self._slot
+            self._value = jax.tree_util.tree_map(lambda x: x[slot], self._batch)
+            self._batch = None
+        return self._value
+
+
+@dataclass
+class _Pending:
+    args: Tuple[Any, ...]
+    future: TaskFuture
+
+
+class AggregationExecutor:
+    """Aggregates submissions of one *kernel family* into bucketed launches.
+
+    Parameters
+    ----------
+    batched_fn : callable
+        ``batched_fn(*stacked_args) -> stacked_out`` where every arg/out has
+        a leading slot axis.  This is the "aggregation region" body: one
+        traced function shared by all aggregated tasks (SGMT by construction).
+    config : AggregationConfig
+        ``max_aggregated`` caps the bucket size (the paper's second launch
+        criterion); ``n_executors`` sizes the underlying executor pool
+        (combining strategy 3 with strategy 2, as the paper's best rows do).
+    """
+
+    def __init__(self, batched_fn: Callable, config: AggregationConfig,
+                 pool: Optional[ExecutorPool] = None,
+                 buffer_pool: Optional[BufferPool] = None,
+                 donate: bool = False,
+                 name: str = "region"):
+        self.name = name
+        self.config = config
+        self.pool = pool or ExecutorPool(config.n_executors)
+        self.buffers = buffer_pool or DEFAULT_POOL
+        self._queue: List[_Pending] = []
+        self._buckets = tuple(sorted(config.bucket_sizes()))
+        self._compiled: Dict[int, Callable] = {}
+        self._batched_fn = batched_fn
+        self._donate = donate
+        # statistics for the benchmark tables
+        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {}}
+
+    # -- compilation cache (pre-compiling all buckets = CPPuddle's
+    #    startup-time executor allocation; lazy by default) ---------------
+    def compiled_for(self, bucket: int) -> Callable:
+        fn = self._compiled.get(bucket)
+        if fn is None:
+            fn = jax.jit(self._batched_fn,
+                         donate_argnums=(0,) if self._donate else ())
+            self._compiled[bucket] = fn
+        return fn
+
+    def warmup(self, example_args: Tuple[Any, ...]) -> None:
+        """Pre-compile every bucket size (amortized startup, like stream
+        pre-allocation in CPPuddle)."""
+        for b in self._buckets:
+            stacked = tuple(
+                jnp.broadcast_to(a[None], (b,) + tuple(np.shape(a)))
+                for a in example_args)
+            jax.block_until_ready(self.compiled_for(b)(*stacked))
+
+    # -- submission API ---------------------------------------------------
+    def submit(self, *args) -> TaskFuture:
+        fut = TaskFuture()
+        self._queue.append(_Pending(args=args, future=fut))
+        self.stats["submitted"] += 1
+        self._maybe_launch()
+        return fut
+
+    def _maybe_launch(self) -> None:
+        """The paper's launch policy: launch when (a) the cap is reached, or
+        (b) an underlying executor is idle; otherwise keep aggregating."""
+        while self._queue:
+            q = len(self._queue)
+            if q >= self.config.max_aggregated:
+                self._launch(self.config.max_aggregated)
+            elif q >= self.config.launch_watermark and self.pool.any_idle():
+                self._launch(self._largest_bucket(q))
+            else:
+                break
+
+    def _largest_bucket(self, k: int) -> int:
+        best = self._buckets[0]
+        for b in self._buckets:
+            if b <= k:
+                best = b
+        return best
+
+    def _launch(self, k: int) -> None:
+        tasks, self._queue = self._queue[:k], self._queue[k:]
+        n_args = len(tasks[0].args)
+        stacked = []
+        for j in range(n_args):
+            parts = [t.args[j] for t in tasks]
+            if k == 1:
+                stacked.append(jnp.asarray(parts[0])[None])
+            elif isinstance(parts[0], jax.Array):
+                stacked.append(jnp.stack(parts))
+            else:
+                stacked.append(jnp.asarray(self.buffers.stage(parts)))
+        exe = self.pool.get()
+        out = exe.launch(self.compiled_for(k), *stacked)
+        for slot, t in enumerate(tasks):
+            t.future._fulfil(out, slot)
+        self.stats["launches"] += 1
+        hist = self.stats["aggregated_hist"]
+        hist[k] = hist.get(k, 0) + 1
+
+    def flush(self) -> None:
+        """Launch everything still queued (greedy buckets) and drain."""
+        while self._queue:
+            self._launch(self._largest_bucket(len(self._queue)))
+        self.pool.drain()
+
+    def map(self, task_args: Sequence[Tuple[Any, ...]]) -> List[Any]:
+        """Submit many tasks, flush, return their results in order."""
+        futs = [self.submit(*a) for a in task_args]
+        self.flush()
+        return [f.result() for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# Region API — the paper's "aggregation region" (a marked code region that
+# compatible tasks may enter together).  Cosmetic sugar over the executor.
+# ---------------------------------------------------------------------------
+
+_REGIONS: Dict[str, AggregationExecutor] = {}
+
+
+def aggregation_region(name: str, batched_fn: Callable,
+                       config: Optional[AggregationConfig] = None,
+                       **kw) -> AggregationExecutor:
+    """Get-or-create the named region's executor (one Executor Pool per
+    aggregation region, as in the paper's CPPuddle implementation)."""
+    exe = _REGIONS.get(name)
+    if exe is None:
+        exe = AggregationExecutor(batched_fn, config or AggregationConfig(),
+                                  name=name, **kw)
+        _REGIONS[name] = exe
+    return exe
+
+
+def reset_regions() -> None:
+    _REGIONS.clear()

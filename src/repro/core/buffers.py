@@ -1,0 +1,56 @@
+"""Recycled staging-buffer pool (the CPPuddle allocator analogue).
+
+The paper: device mallocs synchronize the whole GPU, so CPPuddle recycles
+buffers between tasks instead of freeing them.  Under JAX the device-side
+analogue is buffer donation + XLA's arena allocator; what remains on the
+*host* is the aggregation staging slab: the contiguous pinned buffer into
+which aggregated tasks write their inputs (each task owning chunk ``i``).
+Reallocating that slab per launch costs an alloc + page-fault storm per
+aggregated kernel; this pool recycles slabs keyed by (shape, dtype), exactly
+like CPPuddle's ``buffer_recycler``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+class BufferPool:
+    """Slab recycler: ``acquire`` hands out a previously released buffer of
+    the same (shape, dtype) if available, else allocates (the "malloc")."""
+
+    def __init__(self):
+        self._free: Dict[Tuple, List[np.ndarray]] = defaultdict(list)
+        self._lock = threading.Lock()
+        self.allocations = 0        # statistics: actual mallocs
+        self.reuses = 0
+
+    def acquire(self, shape: Sequence[int], dtype) -> np.ndarray:
+        key = (tuple(shape), np.dtype(dtype).str)
+        with self._lock:
+            if self._free[key]:
+                self.reuses += 1
+                return self._free[key].pop()
+        self.allocations += 1
+        return np.empty(shape, dtype)
+
+    def release(self, buf: np.ndarray) -> None:
+        key = (tuple(buf.shape), buf.dtype.str)
+        with self._lock:
+            self._free[key].append(buf)
+
+    def stage(self, parts: Sequence[np.ndarray]) -> np.ndarray:
+        """Stack task inputs into one recycled slab (tasks fill chunks)."""
+        n = len(parts)
+        shape = (n,) + tuple(parts[0].shape)
+        slab = self.acquire(shape, parts[0].dtype)
+        for i, p in enumerate(parts):
+            slab[i] = p
+        return slab
+
+
+# process-wide default pool, mirroring CPPuddle's global recycler
+DEFAULT_POOL = BufferPool()

@@ -1,0 +1,95 @@
+"""Device executors and the pre-allocated executor pool (CPPuddle analogue).
+
+A ``DeviceExecutor`` is the TPU/XLA analogue of one GPU stream: a handle that
+tracks its in-flight launches so the aggregation layer can ask "is this
+executor busy?" — the paper's launch criterion for strategy 3.  Under XLA,
+dispatch is asynchronous (enqueue returns immediately); an executor is busy
+while any of its enqueued launches has not yet produced ready buffers.
+
+The ``ExecutorPool`` mirrors CPPuddle's pre-allocated pool: created once at
+startup (stream/executor creation at runtime would synchronize a GPU device;
+under XLA the analogous cost is re-tracing/compilation, which the pool also
+caches), handed out round-robin or by load.
+
+Hardware-adaptation note (DESIGN.md §2): XLA:TPU runs one kernel at a time
+per core, so executors do not add device-side concurrency the way CUDA
+streams can on an A100.  They still pipeline host dispatch against device
+execution — exactly the regime in which the paper found strategy 2 to be
+insufficient on MI100, which we reproduce on this third runtime.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+
+
+def _is_ready(x) -> bool:
+    """True if a jax array's backing buffer is available (non-blocking)."""
+    try:
+        return bool(x.is_ready())
+    except AttributeError:          # non-jax leaf (python scalar etc.)
+        return True
+
+
+class DeviceExecutor:
+    """One launch queue.  Tracks outstanding results for busy-detection."""
+
+    def __init__(self, index: int, max_inflight_tracked: int = 64):
+        self.index = index
+        self._inflight: List[Any] = []
+        self._max_tracked = max_inflight_tracked
+        self.launches = 0           # statistics
+
+    def launch(self, fn: Callable, *args) -> Any:
+        """Enqueue fn(*args) (async under XLA) and track its outputs."""
+        out = fn(*args)
+        self.launches += 1
+        leaves = jax.tree_util.tree_leaves(out)
+        if leaves:
+            self._inflight.append(leaves[-1])
+            if len(self._inflight) > self._max_tracked:
+                self._inflight = self._inflight[-self._max_tracked:]
+        return out
+
+    def busy(self) -> bool:
+        self._inflight = [x for x in self._inflight if not _is_ready(x)]
+        return bool(self._inflight)
+
+    def drain(self) -> None:
+        for x in self._inflight:
+            jax.block_until_ready(x)
+        self._inflight.clear()
+
+
+class ExecutorPool:
+    """Pre-allocated pool of executors with round-robin / least-loaded
+    scheduling (CPPuddle's ``executor_pool`` analogue)."""
+
+    def __init__(self, n_executors: int = 1, scheduling: str = "round_robin"):
+        assert n_executors >= 1
+        self.executors = [DeviceExecutor(i) for i in range(n_executors)]
+        self.scheduling = scheduling
+        self._rr = itertools.cycle(range(n_executors))
+
+    def __len__(self) -> int:
+        return len(self.executors)
+
+    def get(self) -> DeviceExecutor:
+        if self.scheduling == "load":
+            idle = [e for e in self.executors if not e.busy()]
+            if idle:
+                return idle[0]
+        return self.executors[next(self._rr)]
+
+    def any_idle(self) -> bool:
+        return any(not e.busy() for e in self.executors)
+
+    def drain(self) -> None:
+        for e in self.executors:
+            e.drain()
+
+    @property
+    def total_launches(self) -> int:
+        return sum(e.launches for e in self.executors)

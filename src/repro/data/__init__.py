@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    DataConfig, SyntheticLMStream, make_batch_specs, length_bucket,
+)
+
+__all__ = ["DataConfig", "SyntheticLMStream", "make_batch_specs",
+           "length_bucket"]

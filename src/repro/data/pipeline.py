@@ -1,0 +1,93 @@
+"""Deterministic synthetic data pipeline with aggregation-aware bucketing.
+
+Production frameworks stream tokenized shards; offline we generate a
+deterministic Zipf-distributed token stream with local n-gram structure (so
+the loss actually decreases) keyed by ``(seed, step)``.  Determinism by step
+index is what makes checkpoint/restart exact: the data "cursor" is just the
+step counter, no iterator state to snapshot.
+
+``length_bucket`` mirrors the paper's bucketing: variable-length requests
+are rounded up to the nearest power-of-two bucket so a small set of compiled
+shapes serves an unbounded request distribution (the static-shape analogue
+of on-the-fly aggregation; same bucket ladder as AggregationConfig).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    vocab_size: int = 256
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+class SyntheticLMStream:
+    """Deterministic (seed, step)-addressable LM batches."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # Zipf-ish unigram distribution over the vocab
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._p = jnp.asarray(p / p.sum(), jnp.float32)
+        # fixed "grammar": each token prefers a few successors
+        key = jax.random.PRNGKey(cfg.seed ^ 0x5EED)
+        self._succ = jax.random.randint(key, (cfg.vocab_size, 4), 0,
+                                        cfg.vocab_size)
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s = cfg.global_batch, cfg.seq_len
+        base = jax.random.categorical(
+            k1, jnp.log(self._p)[None, None, :], shape=(b, s))
+        # 50% of positions follow the grammar: succ(prev_token)
+        pick = jax.random.randint(k2, (b, s), 0, 4)
+        follow = jax.random.bernoulli(k3, 0.5, (b, s))
+        prev = jnp.roll(base, 1, axis=1)
+        grammar = jnp.take_along_axis(self._succ[prev], pick[..., None],
+                                      axis=-1)[..., 0]
+        tokens = jnp.where(follow, grammar, base)
+        labels = jnp.roll(tokens, -1, axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+
+def length_bucket(n: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= n (static-shape aggregation ladder)."""
+    for b in sorted(buckets):
+        if b >= n:
+            return b
+    return max(buckets)
+
+
+def make_batch_specs(cfg, shape, extra_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for one (arch, shape) batch — used by the dry-run.
+
+    Returns the dict of inputs ``train_step``/``serve_step`` consume.
+    """
+    from repro.configs.base import ModelConfig, ShapeConfig  # noqa
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train" or shape.kind == "prefill":
+        batch = {"tokens": sd((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = sd((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            batch["vision"] = sd((b, cfg.vision_tokens, cfg.d_model),
+                                 extra_dtype)
+        if cfg.family == "audio":
+            batch["frames"] = sd((b, s * cfg.encoder_seq_ratio, cfg.d_model),
+                                 extra_dtype)
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": sd((b, 1), jnp.int32)}
+    return batch

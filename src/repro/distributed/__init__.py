@@ -1,0 +1,13 @@
+from repro.distributed.api import (
+    ShardingRules, constrain, current_rules, logical_rules, spec_for,
+)
+from repro.distributed.fault_tolerance import (
+    SimulatedFailure, make_dp_train_step, rescale_state, residual_init,
+    resilient_loop,
+)
+
+__all__ = [
+    "ShardingRules", "constrain", "current_rules", "logical_rules",
+    "spec_for", "SimulatedFailure", "make_dp_train_step", "rescale_state",
+    "residual_init", "resilient_loop",
+]

@@ -1,0 +1,136 @@
+"""Logical-axis sharding API (MaxText-style, mesh-agnostic model code).
+
+Model code calls ``constrain(x, "batch", "seq", "embed")``; a context manager
+installs the logical->mesh translation.  Outside any context this is a no-op,
+so smoke tests and single-device runs never touch device state.
+
+Divisibility-aware: a logical axis only maps to mesh axes whose size divides
+the corresponding array dimension — otherwise that dimension is replicated
+(needed e.g. for 4-KV-head GQA on a 16-way model axis, or vocab 256206).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+# Default logical rules.  "pod" and "data" jointly form the DP/FSDP domain;
+# "model" is the TP/EP domain.
+DEFAULT_RULES: Dict[str, AxisSpec] = {
+    "batch": ("pod", "data"),
+    "tokens": ("pod", "data"),    # flattened batch*seq (MoE dispatch)
+    "seq": None,                  # activations inside a block: full sequence
+    "seq_sp": ("model",),         # residual stream BETWEEN blocks: Megatron-SP
+    "kv_seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "fsdp": ("pod", "data"),      # parameter sharding domain (ZeRO-3)
+    "tp": ("model",),
+    "subgrid": ("pod", "data"),   # hydro: sub-grids distribute like batch
+    # expert-capacity rows: model-axis fallback when the expert count
+    # doesn't divide it.  NOT the DP axes: the dispatch scatter's source is
+    # token-sharded over (pod, data), and XLA SPMD replicates scatters whose
+    # source and destination are sharded over the same axis on different
+    # dims (measured: 428 GB/device for dbrx — see EXPERIMENTS.md §Perf,
+    # refuted hypothesis A2).
+    "capacity": ("model",),
+    "state": None,
+    "replicated": None,
+}
+
+
+@dataclass
+class ShardingRules:
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, AxisSpec] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def axis_size(self, spec: AxisSpec) -> int:
+        if spec is None or self.mesh is None:
+            return 1
+        names = (spec,) if isinstance(spec, str) else spec
+        n = 1
+        for a in names:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(mesh: Optional[Mesh], overrides: Optional[Dict[str, AxisSpec]] = None):
+    prev = current_rules()
+    r = ShardingRules(mesh=mesh)
+    if overrides:
+        r.rules.update(overrides)
+    _tls.rules = r
+    try:
+        yield r
+    finally:
+        _tls.rules = prev
+
+
+def _resolve(ctx: ShardingRules, dim_size: int, name: Optional[str],
+             used: set) -> AxisSpec:
+    if name is None:
+        return None
+    spec = ctx.rules.get(name)
+    if spec is None:
+        return None
+    names = (spec,) if isinstance(spec, str) else tuple(spec)
+    # keep the longest sub-sequence of *available* mesh axes whose product
+    # divides the dimension (axes already used by another dim are skipped,
+    # not fatal — e.g. kv_seq=(pod,data,model) falls back to (model,) when
+    # batch took pod+data)
+    kept = []
+    prod = 1
+    for a in names:
+        if a in used:
+            continue
+        sz = ctx.mesh.shape.get(a, 1) if ctx.mesh else 1
+        if sz == 1:
+            continue
+        if dim_size % (prod * sz) == 0:
+            kept.append(a)
+            prod *= sz
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]]) -> P:
+    ctx = current_rules()
+    assert ctx is not None
+    assert len(shape) == len(names), (shape, names)
+    used = set()
+    out = []
+    for d, n in zip(shape, names):
+        s = _resolve(ctx, d, n, used)
+        if s is not None:
+            flat = (s,) if isinstance(s, str) else s
+            used.update(flat)
+        out.append(s)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a logical-axis sharding constraint; no-op without a context."""
+    ctx = current_rules()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = spec_for(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

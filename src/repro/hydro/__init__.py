@@ -1,0 +1,26 @@
+"""Octo-Tiger-style hydro solver (the paper's application substrate).
+
+Inviscid Euler equations on a uniform Cartesian grid decomposed into
+fixed-size sub-grids (octree leaves with AMR off, as in the paper's Sedov
+benchmark).  Piecewise-parabolic reconstruction at 26 quadrature points per
+cell, Kurganov-Tadmor central-upwind fluxes integrated with Newton-Cotes
+(Simpson) quadrature over each face, TVD-RK3 time stepping under a Courant
+condition.
+"""
+from repro.hydro.euler import (
+    N_FIELDS, cons_to_prim, prim_to_cons, sound_speed, euler_flux, max_signal_speed,
+)
+from repro.hydro.ppm import DIRECTIONS, DIR_PAIRS, ppm_reconstruct_all
+from repro.hydro.flux import flux_divergence, FACE_QUAD
+from repro.hydro.state import (
+    HydroState, sedov_init, assemble_global, extract_subgrids, fill_ghosts,
+)
+from repro.hydro.stepper import courant_dt, rk3_step, subgrid_rhs, total_conserved
+
+__all__ = [
+    "N_FIELDS", "cons_to_prim", "prim_to_cons", "sound_speed", "euler_flux",
+    "max_signal_speed", "DIRECTIONS", "DIR_PAIRS", "ppm_reconstruct_all",
+    "flux_divergence", "FACE_QUAD", "HydroState", "sedov_init",
+    "assemble_global", "extract_subgrids", "fill_ghosts", "courant_dt",
+    "rk3_step", "subgrid_rhs", "total_conserved",
+]

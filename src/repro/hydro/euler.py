@@ -1,0 +1,67 @@
+"""Inviscid Euler equations: conserved <-> primitive maps and point fluxes.
+
+Field layout (leading axis of every state array), matching Octo-Tiger's
+hydro variables: ``U = (rho, Sx, Sy, Sz, E)`` with momentum ``S = rho*v`` and
+total energy ``E = rho*e + 0.5*rho*|v|^2``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+N_FIELDS = 5
+RHO, SX, SY, SZ, EN = range(N_FIELDS)
+
+# Density/pressure floors: the Sedov IC has near-zero pressure outside the
+# blast, and limited reconstruction can undershoot.  Octo-Tiger applies the
+# same kind of floors in its physics module.
+RHO_FLOOR = 1e-10
+P_FLOOR = 1e-12
+
+
+def cons_to_prim(u, gamma: float):
+    """(5, ...) conserved -> (rho, vx, vy, vz, p)."""
+    rho = jnp.maximum(u[RHO], RHO_FLOOR)
+    vx, vy, vz = u[SX] / rho, u[SY] / rho, u[SZ] / rho
+    ke = 0.5 * rho * (vx * vx + vy * vy + vz * vz)
+    p = jnp.maximum((gamma - 1.0) * (u[EN] - ke), P_FLOOR)
+    return rho, vx, vy, vz, p
+
+
+def prim_to_cons(rho, vx, vy, vz, p, gamma: float):
+    e = p / (gamma - 1.0) + 0.5 * rho * (vx * vx + vy * vy + vz * vz)
+    return jnp.stack([rho, rho * vx, rho * vy, rho * vz, e])
+
+
+def sound_speed(rho, p, gamma: float):
+    return jnp.sqrt(gamma * p / rho)
+
+
+def euler_flux(u, axis: int, gamma: float):
+    """Physical flux F_axis(U): (5, ...) -> (5, ...)."""
+    rho, vx, vy, vz, p = cons_to_prim(u, gamma)
+    v = (vx, vy, vz)[axis]
+    f = jnp.stack([
+        rho * v,
+        u[SX] * v,
+        u[SY] * v,
+        u[SZ] * v,
+        (u[EN] + p) * v,
+    ])
+    # pressure contribution to the momentum component along `axis`
+    return f.at[SX + axis].add(p)
+
+
+def max_signal_speed(u, gamma: float):
+    """max over cells of (|v| + c) — the Courant-condition signal speed."""
+    rho, vx, vy, vz, p = cons_to_prim(u, gamma)
+    c = sound_speed(rho, p, gamma)
+    vmag = jnp.sqrt(vx * vx + vy * vy + vz * vz)
+    return jnp.max(vmag + c)
+
+
+def signal_speed_axis(u, axis: int, gamma: float):
+    """|v_axis| + c per cell (central-upwind local speed estimate)."""
+    rho, vx, vy, vz, p = cons_to_prim(u, gamma)
+    c = sound_speed(rho, p, gamma)
+    v = (vx, vy, vz)[axis]
+    return jnp.abs(v) + c

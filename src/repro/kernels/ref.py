@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.hydro.flux import flux_divergence
+from repro.hydro.ppm import ppm_reconstruct_all
+from repro.hydro.stepper import subgrid_rhs
+
+
+def hydro_rhs_ref(u_slots, *, h, gamma, ghost, subgrid):
+    """(slots, F, P, P, P) -> (slots, F, S, S, S)."""
+    body = partial(subgrid_rhs, h=h, gamma=gamma, ghost=ghost, subgrid=subgrid)
+    return jax.vmap(body)(u_slots)
+
+
+def hydro_reconstruct_ref(u_slots):
+    """(slots, F, P, P, P) -> (slots, 13, 2, F, P, P, P)."""
+    return jax.vmap(ppm_reconstruct_all)(u_slots)
+
+
+def hydro_flux_ref(recon, *, h, gamma, ghost, subgrid):
+    """(slots, 13, 2, F, P, P, P) -> (slots, F, S, S, S)."""
+    body = partial(flux_divergence, h=h, gamma=gamma, ghost=ghost,
+                   subgrid=subgrid)
+    return jax.vmap(body)(recon)
+
+
+def grouped_gemm_ref(x, w, group_len):
+    """Capacity-layout grouped GEMM oracle.
+
+    x: (E, C, K), w: (E, K, N), group_len: (E,) valid rows per expert.
+    Rows >= group_len[e] are masked to zero in the output.
+    """
+    y = jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    c = x.shape[1]
+    mask = jnp.arange(c)[None, :] < group_len[:, None]
+    return (y * mask[..., None]).astype(x.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """Bucketed GQA decode-attention oracle.
+
+    q: (B, Hq, D); k_cache/v_cache: (B, S, Hkv, D); cache_len: (B,) int32.
+    Returns (B, Hq, D).
+
+    The einsums contract directly against the (B, S, Hkv, D) cache layout —
+    no transpose of the (potentially huge) cache is ever materialized, and
+    the cache's sequence sharding is preserved through the contraction
+    (XLA reduces partial attention with a psum when S is sharded).
+    """
+    from repro.distributed.api import constrain
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    scores = constrain(scores, "batch", None, None, "kv_seq")
+    valid = jnp.arange(s)[None, :] < cache_len[:, None]       # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    # streaming-softmax form: max/exp stay sequence-sharded, the two
+    # reductions are the only cross-shard ops
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    out = out / denom
+    return out.reshape(b, hq, d).astype(q.dtype)

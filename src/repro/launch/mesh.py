@@ -1,0 +1,23 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod = 16x16 = 256 chips (v5e pod),
+multi-pod = 2 pods = 512 chips with a leading "pod" axis whose collectives
+cross the slow inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over available devices (tests / examples)."""
+    n = n_data * n_model
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

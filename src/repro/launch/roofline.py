@@ -1,0 +1,292 @@
+"""Roofline-term derivation: analytic FLOPs/bytes + HLO collective parsing.
+
+Why analytic FLOPs: ``compiled.cost_analysis()`` visits every HLO
+computation ONCE, so a scan-over-layers body is counted for one layer and a
+chunked-attention inner loop for one chunk — for a 36-layer model the
+reported FLOPs are ~20-40x low (measured; see EXPERIMENTS.md §Roofline
+methodology).  The compute/memory terms are therefore derived from explicit
+per-family formulas (the napkin math is the point of a roofline), while the
+collective term IS parsed from the compiled SPMD module with while-loop trip
+counts folded in (``parse_collectives_with_trips``), because the collective
+schedule — what XLA actually inserted — cannot be guessed analytically.
+
+All hardware constants are TPU v5e-class, per chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI direction
+
+REMAT_FACTOR = 4.0 / 3.0   # full remat: backward replays one extra forward
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs (global, per step)
+# ---------------------------------------------------------------------------
+
+def _attn_flops_fwd(cfg, tokens: int, kv_len: float) -> float:
+    """QK^T + PV matmul flops for `tokens` queries against kv_len keys."""
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    return 2.0 * 2.0 * tokens * kv_len * hq * hd
+
+
+def _ssd_flops_fwd(cfg, tokens: int) -> float:
+    """Mamba2 chunked SSD: intra-chunk (C B^T masked) + state path."""
+    inner = cfg.ssm_expand * cfg.d_model
+    h = inner // 64
+    n, c = cfg.ssm_state, cfg.ssm_chunk
+    # CB^T (T*c*n), decay-weighted matmul (T*c*h*p), state in/out (T*n*p*h)
+    p = 64
+    return 2.0 * tokens * (c * n + c * h * p + 2.0 * n * p * h)
+
+
+def _mlstm_flops_fwd(cfg, tokens: int) -> float:
+    inner = cfg.ssm_expand * cfg.d_model
+    hd = inner // cfg.n_heads
+    c = cfg.ssm_chunk
+    # intra-chunk qk/pv (2 * T*c*inner each) + state path (T*hd*hd per head)
+    return 2.0 * tokens * (2.0 * c * inner + cfg.n_heads * hd * hd)
+
+
+def analytic_flops(cfg, shape) -> Dict[str, float]:
+    """Global FLOPs per step, matmul-level accounting, per family."""
+    n_params = cfg.param_count(active_only=bool(cfg.n_experts))
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, kv, fwd_mult = b * s, s / 2.0, 3.0 * REMAT_FACTOR
+    elif shape.kind == "prefill":
+        tokens, kv, fwd_mult = b * s, s / 2.0, 1.0
+    else:
+        tokens, kv, fwd_mult = b, float(s), 1.0
+
+    mat = 2.0 * n_params * tokens          # one forward through all params
+    fam = cfg.family
+    mixer = 0.0
+    if fam in ("dense", "moe", "vlm", "audio"):
+        layers = cfg.n_layers
+        if cfg.sliding_window:
+            kv = min(kv, float(cfg.sliding_window))
+        mixer += layers * _attn_flops_fwd(cfg, tokens, kv)
+        if fam == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            mixer += n_cross * _attn_flops_fwd(cfg, tokens, cfg.vision_tokens)
+        if fam == "audio":
+            enc_tok = tokens * cfg.encoder_seq_ratio if shape.kind != "decode" \
+                else 0
+            mixer += cfg.n_encoder_layers * _attn_flops_fwd(
+                cfg, enc_tok, s * cfg.encoder_seq_ratio)
+            mixer += cfg.n_layers * _attn_flops_fwd(
+                cfg, tokens, s * cfg.encoder_seq_ratio)   # cross
+    elif fam == "ssm":
+        groups = cfg.n_layers // cfg.slstm_every
+        mixer += (cfg.n_layers - groups) * _mlstm_flops_fwd(cfg, tokens)
+        # sLSTM: sequential, 8*d^2 per token per layer (4 gates x W_x+W_h)
+        mixer += groups * 2.0 * tokens * 8.0 * cfg.d_model ** 2
+    elif fam == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        mixer += cfg.n_layers * _ssd_flops_fwd(cfg, tokens)
+        mixer += groups * _attn_flops_fwd(cfg, tokens, kv)
+
+    total_fwd = mat + mixer
+    return {"total": total_fwd * fwd_mult,
+            "matmul_fwd": mat, "mixer_fwd": mixer,
+            "model_flops": (6.0 if shape.kind == "train" else 2.0)
+            * n_params * tokens}
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM bytes (per device, per step)
+# ---------------------------------------------------------------------------
+
+def analytic_bytes(cfg, shape, chips: int, temp_bytes: int = 0) -> Dict[str, float]:
+    """Per-device HBM traffic model.
+
+    * params: each layer's weights are read for fwd, the remat re-forward and
+      bwd (3x), grads+opt-state read/write (12 bytes/param fp32 m,v + grad)
+      — FSDP means each device touches params/chips bytes.
+    * activations: ~12 residual-stream-sized reads+writes per layer (qkv, o,
+      norms, mlp in/out ...), bf16, batch+seq+model sharded (the SP layout);
+      plus the score/prob traffic of chunked attention (f32, heads-sharded).
+    """
+    n_params = cfg.param_count(active_only=False)
+    b, s = shape.global_batch, shape.seq_len
+    dtype_b = 2
+    if shape.kind == "train":
+        param_traffic = n_params * (3 * dtype_b + 12)
+        act_passes = 3.0
+    elif shape.kind == "prefill":
+        param_traffic = n_params * dtype_b
+        act_passes = 1.0
+    else:
+        param_traffic = cfg.param_count(active_only=bool(cfg.n_experts)) \
+            * dtype_b
+        act_passes = 1.0
+
+    tokens = b * (s if shape.kind != "decode" else 1)
+    resid = tokens * cfg.d_model * dtype_b
+    act_traffic = 12.0 * cfg.n_layers * resid * act_passes
+    if cfg.family in ("dense", "moe", "vlm", "audio") and shape.kind != "decode":
+        kv_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        probs = tokens * kv_eff * cfg.n_heads * 4.0     # f32 scores once
+        act_traffic += 2.0 * probs * act_passes
+    if shape.kind == "decode":
+        # decode reads the whole KV cache (or window/state) once per step
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        kv_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            act_traffic += 2.0 * cfg.n_layers * b * kv_eff * hkv * hd * dtype_b
+        elif cfg.family == "hybrid":
+            groups = cfg.n_layers // cfg.shared_attn_every
+            inner = cfg.ssm_expand * cfg.d_model
+            act_traffic += 2.0 * groups * b * kv_eff * hkv * hd * dtype_b
+            act_traffic += cfg.n_layers * b * (inner // 64) * cfg.ssm_state \
+                * 64 * 4.0
+        elif cfg.family == "ssm":
+            inner = cfg.ssm_expand * cfg.d_model
+            hd2 = (inner // cfg.n_heads) ** 2
+            act_traffic += cfg.n_layers * b * cfg.n_heads * hd2 * 4.0
+
+    per_device = (param_traffic + act_traffic) / chips
+    return {"total": per_device,
+            "param_traffic_global": param_traffic,
+            "act_traffic_global": act_traffic}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing with while-loop trip counts
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split an HLO module into computations.  Headers look like
+    ``%name (p: (s32[], bf16[...])) -> (...) {`` — parameter lists nest
+    parentheses (tuples), so match on the name + trailing ``{`` only."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{") \
+                and "->" in line:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Extract the loop bound from a while condition computation."""
+    consts = []
+    for ln in cond_lines:
+        m = re.search(r"constant\((\d+)\)", ln)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def parse_collectives_with_trips(hlo: str) -> Dict[str, float]:
+    """Per-device collective bytes with while-loop bodies multiplied by
+    their trip counts (scan-over-layers collectives count once per layer)."""
+    comps = _split_computations(hlo)
+
+    def comp_bytes(name: str, seen) -> Dict[str, float]:
+        if name in seen:            # defensive: HLO call graphs are acyclic
+            return {k: 0.0 for k in _COLLECTIVES}
+        seen = seen | {name}
+        out = {k: 0.0 for k in _COLLECTIVES}
+        for ln in comps.get(name, ()):
+            s = ln.strip()
+            wm = re.search(r"while\(.*?\).*condition=%?([\w.\-]+).*"
+                           r"body=%?([\w.\-]+)", s)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                sub = comp_bytes(body, seen)
+                for k in _COLLECTIVES:
+                    out[k] += trips * sub[k]
+                continue
+            for kind in _COLLECTIVES:
+                m = re.search(rf"= (.*?) {kind}(-start)?\(", s)
+                if not m or f"{kind}-done" in s:
+                    continue
+                result_part = m.group(1)
+                operand_part = s[m.end():]
+                if kind == "all-gather":
+                    out[kind] += _shape_bytes(result_part)
+                else:
+                    out[kind] += _shape_bytes(operand_part)
+                break
+        return out
+
+    # entry computation name
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        return {k: 0.0 for k in _COLLECTIVES} | {"total": 0.0}
+    out = comp_bytes(entry, frozenset())
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(cfg, shape, chips: int, coll: Dict[str, float],
+                   cross_pod_fraction: float = 0.0) -> Dict[str, Any]:
+    fl = analytic_flops(cfg, shape)
+    by = analytic_bytes(cfg, shape, chips)
+    t_compute = fl["total"] / chips / PEAK_FLOPS
+    t_memory = by["total"] / HBM_BW
+    t_coll = coll["total"] / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mfu_at_bound = (fl["model_flops"] / chips / PEAK_FLOPS) / bound \
+        if bound > 0 else 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "analytic_flops_global": fl["total"],
+        "model_flops_global": fl["model_flops"],
+        "useful_flop_ratio": fl["model_flops"] / fl["total"],
+        "hbm_bytes_per_device": by["total"],
+        "collective_bytes_per_device": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "roofline_bound_s": bound,
+        "roofline_fraction": mfu_at_bound,
+    }

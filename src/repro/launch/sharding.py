@@ -1,0 +1,190 @@
+"""Sharding-spec derivation for parameters, optimizer state, batches, caches.
+
+Logical-axis rules (repro.distributed.api) are resolved against the mesh
+with divisibility fallback, so the SAME rules serve every (arch x shape x
+mesh) cell: 4-KV-head GQA simply replicates the kv-head dim on a 16-way
+model axis, a 60-expert MoE falls back from expert- to ff-sharding, a
+batch-1 long-context cache falls back from batch- to sequence-sharding.
+
+Parameter rule: weight matrices shard (d_model -> fsdp = pod x data,
+fan-out -> tp = model); this is ZeRO-3/FSDP — XLA all-gathers a layer's
+weights just-in-time inside the scan-over-layers (overlapping with the
+previous layer's compute) and reduce-scatters gradients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.api import logical_rules, spec_for
+
+# -- parameter leaf rules (base shapes; stacked-layer axes are prepended) ---
+# fmt: off
+_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "emb": ("vocab", "fsdp"),
+    "head": ("fsdp", "vocab"),
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    "up_l": ("fsdp", "tp"), "up_r": ("fsdp", "tp"),
+    "down": ("tp", "fsdp"),
+    "w_x": ("fsdp", "tp"), "w_h": ("fsdp", "tp"),
+    "w_if": ("fsdp", None),
+}
+_MOE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("expert", "fsdp", "tp"),
+    "w_up": ("expert", "fsdp", "tp"),
+    "w_down": ("expert", "tp", "fsdp"),
+}
+# fmt: on
+
+
+def _leaf_key(path) -> Tuple[Sequence[str], str]:
+    keys = [str(p.key) for p in path if hasattr(p, "key")]
+    return keys, keys[-1] if keys else ""
+
+
+def param_pspec(tree) -> Any:
+    """PartitionSpec tree for a parameter pytree (inside a rules context)."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys, key = _leaf_key(path)
+        in_moe = "moe" in keys and "shared" not in keys
+        base = _MOE_AXES.get(key) if in_moe and key in _MOE_AXES else \
+            _PARAM_AXES.get(key)
+        shape = leaf.shape
+        if base is None or len(base) > len(shape):
+            out.append(P())
+            continue
+        extra = len(shape) - len(base)
+        names = (None,) * extra + tuple(base)
+        out.append(spec_for(shape, names))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# -- cache leaf rules --------------------------------------------------------
+
+def _cache_slot_axes(cache_shapes, probe_shapes) -> list:
+    axes = []
+    for a, b in zip(jax.tree_util.tree_leaves(cache_shapes),
+                    jax.tree_util.tree_leaves(probe_shapes)):
+        axes.append(next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                          if x != y), None))
+    return axes
+
+
+def cache_pspec(cache_shapes, probe_shapes) -> Any:
+    """PartitionSpec tree for a decode cache.  ``probe_shapes`` is the same
+    cache built at batch+1 (robust slot-axis identification)."""
+    slot_axes = _cache_slot_axes(cache_shapes, probe_shapes)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for (path, leaf), slot in zip(flat, slot_axes):
+        keys, key = _leaf_key(path)
+        nd = len(leaf.shape)
+        names: list = [None] * nd
+        if slot is not None:
+            names[slot] = "batch"
+            rest = nd - slot - 1
+            if key in ("k", "v") and rest >= 2:
+                names[slot + 1] = "kv_seq"
+                names[slot + 2] = "kv_heads"
+            elif key in ("ssm", "C") and rest >= 1:
+                names[slot + 1] = "heads"
+            elif key in ("n", "m") and rest >= 1 and "mlstm" in keys:
+                names[slot + 1] = "heads"
+        out.append(spec_for(leaf.shape, names))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def batch_pspec(batch_shapes) -> Any:
+    """Batch inputs shard on the (pod, data) batch axis."""
+    def one(leaf):
+        names = ["batch"] + [None] * (len(leaf.shape) - 1)
+        return spec_for(leaf.shape, names)
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def named(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_pspec(param_spec_tree) -> Any:
+    """Optimizer state mirrors params; step counter replicated."""
+    return {"m": param_spec_tree,
+            "v": param_spec_tree,
+            "step": P()}
+
+
+def rules_overrides(shape, cfg=None) -> Dict:
+    """Logical-rule overrides for one shape cell.  The SAME overrides must be
+    active while tracing/lowering the step so in-model ``constrain`` calls
+    resolve (sharding constraints inside scan bodies are what keep while-loop
+    residuals sharded — without them XLA drops the batch sharding on saved
+    activations)."""
+    ov: Dict = {}
+    if shape.kind == "decode":
+        # decode caches: the KV sequence absorbs whatever mesh axes the
+        # request batch can't cover (model for batched decode, everything
+        # for batch-1 long-context)
+        ov.setdefault("kv_seq", ("pod", "data", "model"))
+        # serving-mode weight sharding: there is no optimizer state to
+        # shard, and FSDP-gathering weights EVERY decoded token is pure
+        # collective overhead (measured 1.05 GB all-gather/step for
+        # seamless multipod — §Perf hillclimb B).  Small models replicate
+        # weights across the DP domain (zero steady-state collectives);
+        # models too big for one chip keep the gather on the intra-pod
+        # data axis only, never across the slow pod links.
+        if cfg is not None:
+            tp_bytes = cfg.param_count() * 2 / 16    # bf16, 16-way TP share
+            ov.setdefault("fsdp",
+                          None if tp_bytes < 6e9 else ("data",))
+    return ov
+
+
+def make_all_specs(cfg, shape, mesh: Mesh, *,
+                   overrides: Optional[Dict] = None):
+    """(param, opt, batch[, cache]) PartitionSpec trees for one cell."""
+    from repro.data.pipeline import make_batch_specs
+    from repro.models import model as model_mod
+
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sh = jax.eval_shape(partial(model_mod.init_params, cfg), key_sds)
+    batch_sh = make_batch_specs(cfg, shape)
+
+    ov = dict(overrides or {})
+    ov.update(rules_overrides(shape, cfg))
+
+    with logical_rules(mesh, ov):
+        pspec = param_pspec(params_sh)
+        ospec = opt_pspec(pspec)
+        bspec = batch_pspec(batch_sh)
+        if shape.kind == "decode":
+            def build(params, b):
+                batch = {"tokens": jnp.zeros((b, 1), jnp.int32)}
+                if cfg.family == "vlm":
+                    batch["vision"] = jnp.zeros(
+                        (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+                if cfg.family == "audio":
+                    batch["frames"] = jnp.zeros(
+                        (b, 8 * cfg.encoder_seq_ratio, cfg.d_model),
+                        jnp.bfloat16)
+                return model_mod.init_cache(cfg, params, batch, b,
+                                            shape.seq_len)
+            cache_sh = jax.eval_shape(
+                partial(build, b=shape.global_batch), params_sh)
+            probe_sh = jax.eval_shape(
+                partial(build, b=shape.global_batch + 1), params_sh)
+            cspec = cache_pspec(cache_sh, probe_sh)
+            return params_sh, batch_sh, cache_sh, pspec, ospec, bspec, cspec
+    return params_sh, batch_sh, None, pspec, ospec, bspec, None

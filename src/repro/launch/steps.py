@@ -1,0 +1,73 @@
+"""train_step / serve_step builders (the units the dry-run lowers).
+
+``train_step``: loss -> grads -> AdamW update, optionally with gradient
+accumulation over microbatches (the S1 knob at the training-loop level:
+fewer, larger per-launch workloads vs. more, smaller ones).
+
+``serve_step``: one aggregated decode launch over the request batch — the
+serving engine's bucketed kernel, here lowered at the full production shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.optim.adamw import OptConfig, opt_update
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, *, microbatch: int = 0
+                    ) -> Callable:
+    def loss_of(params, batch):
+        return model_mod.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            # gradient accumulation: scan over microbatches
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mbatch):
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                carry = (carry[0] + l,
+                         jax.tree_util.tree_map(jnp.add, carry[1], g))
+                return carry, None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zero_g), mb)
+            loss = loss / microbatch
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        new_p, new_s, metrics = opt_update(grads, opt_state, params, opt_cfg)
+        return new_p, new_s, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg) -> Callable:
+    """Forward at full sequence (the prefill cost proxy: logits for the last
+    position only, hidden states for cache construction elided in dry-run)."""
+    def prefill_step(params, batch):
+        h = model_mod.forward_hidden(cfg, params, batch)
+        # emit only the last position's logits (decode handoff)
+        from repro.models.common import rmsnorm
+        hl = rmsnorm(h[:, -1], params["embed"]["ln_f"], cfg.norm_eps)
+        w = params["embed"]["emb"].T if cfg.tie_embeddings \
+            else params["embed"]["head"]
+        return hl @ w
+    return prefill_step
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, cache, batch):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return model_mod.decode_step(cfg, params, cache, tokens)
+    return serve_step

@@ -1,0 +1,10 @@
+from repro.models import common, model, moe, ssm, transformer
+from repro.models.model import (
+    decode_step, forward, forward_hidden, init_cache, init_params, loss_fn,
+)
+
+__all__ = [
+    "common", "model", "moe", "ssm", "transformer",
+    "decode_step", "forward", "forward_hidden", "init_cache", "init_params",
+    "loss_fn",
+]

@@ -1,0 +1,435 @@
+"""Model assembly: init / forward / decode for all 10 assigned families.
+
+Layer stacks are ``lax.scan``-ed over stacked parameters (small HLO, fast
+compile, remat-friendly).  Heterogeneous stacks scan over *groups* whose body
+is the repeating pattern:
+
+  dense/moe      : [block] x L
+  vlm            : [self x (every-1), cross] x G        (llama-3.2-vision)
+  ssm  (xlstm)   : [mLSTM x (every-1), sLSTM] x G
+  hybrid (zamba2): [mamba2 x every] x G, one SHARED attn+MLP block applied
+                   between groups (one set of weights, G invocations — the
+                   paper's "same code region, different data" taken to the
+                   extreme: the aggregated kernel IS the shared block)
+  audio (encdec) : encoder [block] x Le, decoder [self+cross] x Ld
+
+The language-model loss is computed in sequence chunks so the fp32
+``(B, S, V)`` logits tensor never materializes (vocab 152k at 1M tokens
+would be ~600 GB).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import (
+    Params, dense_init, dtype_of, rmsnorm, softmax_xent, split_keys,
+)
+
+Batch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stacked_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jnp.stack(split_keys(key, n)))
+
+
+def _maybe_remat(fn, cfg):
+    """Full remat of each layer body: recompute everything in backward.
+    Measured against dots_with_no_batch_dims_saveable this halves the
+    per-layer saved-activation slope (2.7 -> 1.1 GB/layer/device for
+    granite-8b train_4k pre-SP) for ~33% more flops — the right trade for
+    memory-bound large cells (EXPERIMENTS.md §Perf)."""
+    if not cfg.remat:
+        return fn
+    policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def _embed_init(key, cfg, dtype) -> Params:
+    ks = split_keys(key, 2)
+    p = {"emb": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dtype),
+         "ln_f": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def _logits_head(p, h, cfg):
+    w = p["emb"].T if cfg.tie_embeddings else p["head"]
+    return h @ w
+
+
+def chunked_xent(p, hidden, labels, cfg, chunk: int = 512):
+    """Mean cross-entropy without materializing (B, S, V) logits."""
+    b, s, d = hidden.shape
+    hidden = rmsnorm(hidden, p["ln_f"], cfg.norm_eps)
+    if s <= chunk or s % chunk != 0:
+        return softmax_xent(_logits_head(p, hidden, cfg), labels)
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hh, ll = xs
+        logits = _logits_head(p, hh, cfg)
+        return carry + softmax_xent(logits, ll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / n
+
+
+# ---------------------------------------------------------------------------
+# per-family stacks
+# ---------------------------------------------------------------------------
+
+def _family(cfg) -> str:
+    return cfg.family
+
+
+def init_params(cfg, key) -> Params:
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, 4)
+    p: Params = {"embed": _embed_init(ks[0], cfg, dtype)}
+    fam = _family(cfg)
+
+    if fam in ("dense", "moe"):
+        kind = "moe" if cfg.n_experts else "self"
+        p["layers"] = _stacked_init(
+            lambda k: tfm.block_init(k, cfg, dtype, kind), ks[1], cfg.n_layers)
+
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        p["selfs"] = _stacked_init(
+            lambda k: _stacked_init(
+                lambda k2: tfm.block_init(k2, cfg, dtype, "self"),
+                k, every - 1),
+            ks[1], groups)
+        p["crosses"] = _stacked_init(
+            lambda k: tfm.block_init(k, cfg, dtype, "cross"), ks[2], groups)
+
+    elif fam == "ssm":       # xlstm
+        every = cfg.slstm_every
+        groups = cfg.n_layers // every
+        p["mlstm"] = _stacked_init(
+            lambda k: _stacked_init(
+                lambda k2: ssm_mod.mlstm_init(k2, cfg, dtype), k, every - 1),
+            ks[1], groups)
+        p["slstm"] = _stacked_init(
+            lambda k: ssm_mod.slstm_init(k, cfg, dtype), ks[2], groups)
+        p["norms"] = jnp.ones((groups, every, cfg.d_model), dtype)
+
+    elif fam == "hybrid":    # zamba2
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // every
+        p["mamba"] = _stacked_init(
+            lambda k: _stacked_init(
+                lambda k2: ssm_mod.mamba2_init(k2, cfg, dtype), k, every),
+            ks[1], groups)
+        p["norms"] = jnp.ones((groups, every, cfg.d_model), dtype)
+        p["shared"] = tfm.block_init(ks[2], cfg, dtype, "self")
+
+    elif fam == "audio":     # enc-dec
+        p["encoder"] = _stacked_init(
+            lambda k: tfm.block_init(k, cfg, dtype, "self"),
+            ks[1], cfg.n_encoder_layers)
+        p["decoder"] = _stacked_init(
+            lambda k: tfm.decoder_layer_init(k, cfg, dtype),
+            ks[2], cfg.n_layers)
+        p["enc_ln"] = jnp.ones((cfg.d_model,), dtype)
+
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg, params, batch: Batch) -> jax.Array:
+    """Returns final hidden states (B, S, d) before the LM head."""
+    fam = _family(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"]["emb"][tokens].astype(dtype_of(cfg))
+    x = constrain(x, "batch", "seq_sp", "embed")
+    positions = jnp.arange(s)
+
+    if fam in ("dense", "moe"):
+        def body(h, lp):
+            return tfm.self_block_apply(lp, h, cfg, positions), None
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    elif fam == "vlm":
+        memory = batch["vision"].astype(x.dtype)
+
+        def group(h, gp):
+            sp, cp = gp
+
+            def inner(hh, lp):
+                return tfm.self_block_apply(lp, hh, cfg, positions), None
+            h, _ = jax.lax.scan(inner, h, sp)
+            h = tfm.cross_block_apply(cp, h, memory, cfg)
+            return h, None
+        group = _maybe_remat(group, cfg)
+        x, _ = jax.lax.scan(group, x, (params["selfs"], params["crosses"]))
+
+    elif fam == "ssm":
+        def group(h, gp):
+            mp, sp, norms = gp
+
+            def inner(hh, inps):
+                lp, nw = inps
+                y, _ = ssm_mod.mlstm_apply(lp, rmsnorm(hh, nw, cfg.norm_eps),
+                                           cfg)
+                return constrain(hh + y, "batch", "seq_sp", "embed"), None
+            h, _ = jax.lax.scan(inner, h, (mp, norms[:-1]))
+            y, _ = ssm_mod.slstm_apply(sp, rmsnorm(h, norms[-1], cfg.norm_eps),
+                                       cfg)
+            return constrain(h + y, "batch", "seq_sp", "embed"), None
+        group = _maybe_remat(group, cfg)
+        x, _ = jax.lax.scan(group, x,
+                            (params["mlstm"], params["slstm"], params["norms"]))
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group(h, gp):
+            mp, norms = gp
+            h = tfm.self_block_apply(shared, h, cfg, positions)
+
+            def inner(hh, inps):
+                lp, nw = inps
+                y, _ = ssm_mod.mamba2_apply(lp, rmsnorm(hh, nw, cfg.norm_eps),
+                                            cfg)
+                return constrain(hh + y, "batch", "seq_sp", "embed"), None
+            h, _ = jax.lax.scan(inner, h, (mp, norms))
+            return h, None
+        group = _maybe_remat(group, cfg)
+        x, _ = jax.lax.scan(group, x, (params["mamba"], params["norms"]))
+
+    elif fam == "audio":
+        frames = batch["frames"].astype(x.dtype)
+        enc_pos = jnp.arange(frames.shape[1])
+
+        def enc_body(h, lp):
+            return tfm.self_block_apply(lp, h, cfg, enc_pos,
+                                        causal=False), None
+        enc_body = _maybe_remat(enc_body, cfg)
+        memory, _ = jax.lax.scan(enc_body, frames, params["encoder"])
+        memory = rmsnorm(memory, params["enc_ln"], cfg.norm_eps)
+
+        def dec_body(h, lp):
+            return tfm.encdec_decoder_apply(lp, h, memory, cfg,
+                                            positions), None
+        dec_body = _maybe_remat(dec_body, cfg)
+        x, _ = jax.lax.scan(dec_body, x, params["decoder"])
+
+    else:
+        raise ValueError(fam)
+    return x
+
+
+def forward(cfg, params, batch: Batch) -> jax.Array:
+    """Full logits (small models / smoke tests only)."""
+    h = forward_hidden(cfg, params, batch)
+    h = rmsnorm(h, params["embed"]["ln_f"], cfg.norm_eps)
+    return _logits_head(params["embed"], h, cfg)
+
+
+def loss_fn(cfg, params, batch: Batch) -> jax.Array:
+    h = forward_hidden(cfg, params, batch)
+    return chunked_xent(params["embed"], h, batch["labels"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, params, batch: Batch, batch_size: int, max_len: int):
+    """Build the decode cache (KV / SSM states / cross-KV) for a family."""
+    fam = _family(cfg)
+    dtype = dtype_of(cfg)
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch_size,), jnp.int32)}
+
+    def kv(n):
+        return jax.vmap(lambda _: tfm.kv_cache_init(cfg, batch_size, max_len,
+                                                    dtype))(jnp.arange(n))
+
+    if fam in ("dense", "moe"):
+        cache["kv"] = kv(cfg.n_layers)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        cache["kv"] = kv(groups * (every - 1)).copy()
+        # reshape to (G, every-1, ...)
+        cache["kv"] = jax.tree_util.tree_map(
+            lambda x: x.reshape((groups, every - 1) + x.shape[1:]), cache["kv"])
+        memory = batch["vision"].astype(dtype)
+        cache["cross_kv"] = jax.vmap(
+            lambda cp: tfm.cross_kv_precompute(cp, memory, cfg)
+        )(params["crosses"])
+    elif fam == "ssm":
+        every = cfg.slstm_every
+        groups = cfg.n_layers // every
+        cache["mlstm"] = jax.vmap(lambda _: jax.vmap(
+            lambda __: ssm_mod.mlstm_state_init(cfg, batch_size))(
+                jnp.arange(every - 1)))(jnp.arange(groups))
+        cache["slstm"] = jax.vmap(
+            lambda _: ssm_mod.slstm_state_init(cfg, batch_size))(
+                jnp.arange(groups))
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // every
+        cache["mamba"] = jax.vmap(lambda _: jax.vmap(
+            lambda __: ssm_mod.mamba2_state_init(cfg, batch_size, dtype))(
+                jnp.arange(every)))(jnp.arange(groups))
+        cache["shared_kv"] = kv(groups)
+    elif fam == "audio":
+        cache["kv"] = kv(cfg.n_layers)
+        memory = forward_encoder(cfg, params, batch["frames"].astype(dtype))
+        cache["cross_kv"] = jax.vmap(
+            lambda dp: tfm.xattn_kv_precompute(dp, memory, cfg)
+        )(params["decoder"])
+    return cache
+
+
+def forward_encoder(cfg, params, frames):
+    enc_pos = jnp.arange(frames.shape[1])
+
+    def enc_body(h, lp):
+        return tfm.self_block_apply(lp, h, cfg, enc_pos, causal=False), None
+    memory, _ = jax.lax.scan(enc_body, frames, params["encoder"])
+    return rmsnorm(memory, params["enc_ln"], cfg.norm_eps)
+
+
+def _scan_decode(body, x, params_stacked, cache_stacked, extra_stacked=None):
+    """Scan over layers with the cache as part of the CARRY.
+
+    Passing the cache as scan xs and re-emitting it as ys keeps TWO
+    full-size cache buffers live across the loop (the stacked ys output
+    cannot alias the xs input); for a 32k-decode cell that is 2x the KV
+    cache in HBM (measured: 55 GB temp for qwen1.5-32b decode_32k).  With
+    the cache in the carry, the per-layer ``dynamic_update_index_in_dim``
+    is performed in place on the single carry buffer (EXPERIMENTS.md §Perf
+    hillclimb C).
+
+    ``body(x, layer_params, cache_layer[, extra_layer]) -> (x, new_cache)``.
+    """
+    n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+
+    def idx(tree, i):
+        return jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            tree)
+
+    def f(carry, inp):
+        h, cache = carry
+        lp, i = inp
+        c_i = idx(cache, i)
+        if extra_stacked is not None:
+            h, c_new = body(h, lp, c_i, idx(extra_stacked, i))
+        else:
+            h, c_new = body(h, lp, c_i)
+        cache = jax.tree_util.tree_map(
+            lambda c, nw: jax.lax.dynamic_update_index_in_dim(
+                c, nw.astype(c.dtype), i, 0),
+            cache, c_new)
+        return (h, cache), None
+
+    (x, cache), _ = jax.lax.scan(
+        f, (x, cache_stacked), (params_stacked, jnp.arange(n)))
+    return x, cache
+
+
+def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Any]:
+    """tokens: (B, 1) -> (logits (B, V), new cache).  cache["len"] holds each
+    request's current length (ragged aggregated batches)."""
+    fam = _family(cfg)
+    clen = cache["len"]
+    x = params["embed"]["emb"][tokens].astype(dtype_of(cfg))
+    cache = dict(cache)
+
+    if fam in ("dense", "moe"):
+        def body(h, lp, c):
+            return tfm.self_block_decode(lp, h, cfg, c, clen)
+        x, cache["kv"] = _scan_decode(body, x, params["layers"], cache["kv"])
+
+    elif fam == "vlm":
+        def group(h, gp, c, xkv):
+            sp, cp = gp
+
+            def inner(hh, lp, cc):
+                return tfm.self_block_decode(lp, hh, cfg, cc, clen)
+            h, c = _scan_decode(inner, h, sp, c)
+            h = tfm.cross_block_decode(cp, h, cfg, xkv)
+            return h, c
+        x, cache["kv"] = _scan_decode(
+            group, x, (params["selfs"], params["crosses"]), cache["kv"],
+            extra_stacked=cache["cross_kv"])
+
+    elif fam == "ssm":
+        def group(h, gp, st):
+            mp, sp, norms = gp
+            mst, sst = st
+
+            def inner(hh, inps, s):
+                lp, nw = inps
+                y, s = ssm_mod.mlstm_apply(lp, rmsnorm(hh, nw, cfg.norm_eps),
+                                           cfg, state=s)
+                return hh + y, s
+            h, mst = _scan_decode(inner, h, (mp, norms[:-1]), mst)
+            y, sst = ssm_mod.slstm_apply(sp, rmsnorm(h, norms[-1],
+                                                     cfg.norm_eps),
+                                         cfg, state=sst)
+            return h + y, (mst, sst)
+        x, (cache["mlstm"], cache["slstm"]) = _scan_decode(
+            group, x, (params["mlstm"], params["slstm"], params["norms"]),
+            (cache["mlstm"], cache["slstm"]))
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group(h, gp, st):
+            mp, norms = gp
+            mst, skv = st
+            h, skv = tfm.self_block_decode(shared, h, cfg, skv, clen)
+
+            def inner(hh, inps, s):
+                lp, nw = inps
+                y, s = ssm_mod.mamba2_apply(lp, rmsnorm(hh, nw, cfg.norm_eps),
+                                            cfg, state=s)
+                return hh + y, s
+            h, mst = _scan_decode(inner, h, (mp, norms), mst)
+            return h, (mst, skv)
+        x, (cache["mamba"], cache["shared_kv"]) = _scan_decode(
+            group, x, (params["mamba"], params["norms"]),
+            (cache["mamba"], cache["shared_kv"]))
+
+    elif fam == "audio":
+        def body(h, lp, c, xkv):
+            return tfm.encdec_decoder_decode(lp, h, cfg, c, clen, xkv)
+        x, cache["kv"] = _scan_decode(body, x, params["decoder"],
+                                      cache["kv"],
+                                      extra_stacked=cache["cross_kv"])
+
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(x[:, 0], params["embed"]["ln_f"], cfg.norm_eps)
+    logits = _logits_head(params["embed"], h, cfg)
+    cache["len"] = clen + 1
+    return logits, cache

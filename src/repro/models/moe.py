@@ -1,0 +1,183 @@
+"""Mixture-of-Experts layer with capacity-layout aggregated expert compute.
+
+The MoE layer is the LM-side embodiment of the paper's problem: top-k routing
+fragments the token batch into E small per-expert GEMMs (fine-grained tasks).
+Launching them separately starves the MXU; this module aggregates them into
+one grouped launch over a static ``(E, C, d)`` capacity layout — the bucketed
+static-shape analogue of the paper's on-the-fly aggregation (DESIGN.md §2).
+
+Dispatch is the standard cumsum-position scheme: each token's position within
+its expert's capacity buffer is its running count; tokens beyond capacity are
+dropped (classic Switch behavior, capacity_factor as the S1 "sub-grid size"
+knob).  Expert compute runs either as one batched XLA einsum or through the
+``grouped_gemm`` Pallas kernel that additionally skips dead capacity tiles.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models.common import Params, dense_init, split_keys, stacked_init
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": stacked_init(ks[1], e, d, ff, dtype),
+        "w_up": stacked_init(ks[2], e, d, ff, dtype),
+        "w_down": stacked_init(ks[3], e, ff, d, dtype),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * (cfg.shared_expert_d_ff or cfg.d_ff)
+        ks2 = split_keys(ks[4], 4)
+        # the n_shared always-on experts are *fused* into one wide SwiGLU
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], d, sff, dtype),
+            "w_up": dense_init(ks2[1], d, sff, dtype),
+            "w_down": dense_init(ks2[2], sff, d, dtype),
+        }
+        p["shared_gate"] = dense_init(ks2[3], d, 1, dtype=jnp.float32)
+    return p
+
+
+CAPACITY_CHUNK = 16_384   # S1 knob: rows per aggregated expert-GEMM launch
+
+
+def capacity_chunks(capacity: int, chunk: int = CAPACITY_CHUNK) -> int:
+    """Number of (power-of-two) capacity chunks for the scanned expert FFN."""
+    n = 1
+    while capacity / n > chunk:
+        n *= 2
+    return n
+
+
+def expert_capacity(n_tokens: int, cfg, capacity_factor: float = 1.25,
+                    align: int = 128) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * capacity_factor))
+    c = max(align, (c + align - 1) // align * align)
+    # align up so the capacity-chunked scan divides evenly
+    n = capacity_chunks(c)
+    step = align * n
+    return (c + step - 1) // step * step
+
+
+def _dispatch_indices(top_idx: jax.Array, e: int, capacity: int):
+    """Positions of each (token, k) pair inside its expert's capacity buffer.
+
+    top_idx: (T, k) int32 expert ids.  Returns (pos (T, k), keep (T, k)).
+    Sequential priority over the k slots (slot 0 routed first), cumulative
+    counts across slots — the standard Switch/GShard dispatch order.
+    """
+    t, k = top_idx.shape
+    pos = jnp.zeros((t, k), jnp.int32)
+    counts = jnp.zeros((e,), jnp.int32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(top_idx[:, j], e, dtype=jnp.int32)   # (T, E)
+        within = jnp.cumsum(onehot, axis=0) - onehot                  # before t
+        pos = pos.at[:, j].set(jnp.sum(within * onehot, axis=1)
+                               + counts[top_idx[:, j]])
+        counts = counts + jnp.sum(onehot, axis=0)
+    keep = pos < capacity
+    return pos, keep
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg, *, capacity_factor: float = 1.25,
+            use_pallas: bool = False) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    xt = constrain(xt, "tokens", "embed")
+
+    # --- routing ---
+    # matmul in the activation dtype, fp32 only from the (T, E) logits on:
+    # an fp32 router input would give the backward an fp32 cotangent copy
+    # of the entire token stream (measured 6.4 GB x dozens for dbrx train).
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    logits = constrain(logits, "tokens", None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, k)                      # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    capacity = expert_capacity(t, cfg, capacity_factor)
+    pos, keep = _dispatch_indices(top_idx, e, capacity)
+
+    # --- scatter tokens into the aggregation slab (E, C, d) ---
+    flat_ti = jnp.repeat(jnp.arange(t), k)                        # (T*k,)
+    flat_e = top_idx.reshape(-1)
+    # dropped tokens point one past the buffer: scatter drops OOB updates
+    flat_pos = jnp.where(keep.reshape(-1), pos.reshape(-1), capacity)
+    x_cap = jnp.zeros((e, capacity, d), x.dtype)
+    x_cap = x_cap.at[flat_e, flat_pos].add(xt[flat_ti])           # unique slots
+    x_cap = constrain(x_cap, "expert", "capacity", "embed")
+
+    group_len = jnp.minimum(
+        jnp.sum(jax.nn.one_hot(top_idx.reshape(-1), e, dtype=jnp.int32), axis=0),
+        capacity)
+
+    # --- aggregated expert compute ---
+    if use_pallas:
+        from repro.kernels.ops import grouped_gemm
+        g = grouped_gemm(x_cap, p["w_gate"], group_len)
+        u = grouped_gemm(x_cap, p["w_up"], group_len)
+        h = jax.nn.silu(g) * u
+        y_cap = grouped_gemm(h, p["w_down"], group_len)
+    else:
+        # scan over capacity chunks: the (E, C, ff) hidden never exists at
+        # once — one chunk's worth of MXU work per launch, rematted (the
+        # hydro sub-grid-size knob applied to the aggregated expert GEMM;
+        # dbrx train: 14 GB fp32 hidden transients -> ~0.9 GB per chunk)
+        n_chunks = capacity_chunks(capacity)
+
+        def chunk_body(xc):
+            g = jnp.einsum("ecd,edf->ecf", xc, p["w_gate"])
+            u = jnp.einsum("ecd,edf->ecf", xc, p["w_up"])
+            h = jax.nn.silu(g) * u
+            h = constrain(h, "expert", "capacity", "ff")
+            return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+        if n_chunks == 1:
+            y_cap = chunk_body(x_cap)
+        else:
+            cc = capacity // n_chunks
+            xch = x_cap.reshape(e, n_chunks, cc, d).transpose(1, 0, 2, 3)
+            body = jax.checkpoint(
+                lambda _, xc: (None, chunk_body(xc)),
+                policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+            _, ych = jax.lax.scan(body, None, xch)
+            y_cap = ych.transpose(1, 0, 2, 3).reshape(e, capacity, d)
+    y_cap = constrain(y_cap, "expert", "capacity", "embed")
+
+    # --- combine: gather each (token, k) result, weight, sum ---
+    # OOB gather indices clip to the last row; those lanes carry weight 0
+    gathered = constrain(y_cap[flat_e, flat_pos], "tokens", "embed")
+    w = (top_p * keep).reshape(-1, 1).astype(gathered.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[flat_ti].add(gathered * w)
+    y = constrain(y, "tokens", "embed")
+
+    # --- fused shared (always-on) experts ---
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        ys = hs @ sp["w_down"]
+        gate = jax.nn.sigmoid(
+            (xt @ p["shared_gate"].astype(xt.dtype)).astype(jnp.float32))
+        y = y + (ys * gate.astype(ys.dtype))
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits: jax.Array, top_idx: jax.Array, e: int):
+    """Switch-style auxiliary loss (exported for the training loop)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_idx[:, 0], e), axis=0)
+    return e * jnp.sum(me * ce)

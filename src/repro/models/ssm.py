@@ -1,0 +1,398 @@
+"""State-space / recurrent mixers: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+All three are *chunked*: the sequence is processed in ``cfg.ssm_chunk``-sized
+blocks with dense intra-chunk compute (MXU-friendly matmuls) and a scan over
+inter-chunk states.  The chunk size is the strategy-1 knob of these layers —
+bigger chunks mean bigger aggregated matmuls per launch, fewer scan steps,
+more VMEM per block; the same trade the paper's sub-grid size controls.
+
+Decode state is O(1) in sequence length (conv tail + SSM / matrix-memory
+state), which is what qualifies the ssm/hybrid archs for the ``long_500k``
+cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+
+MAMBA_HEAD_DIM = 64
+CONV_WIDTH = 4
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n_heads = inner // MAMBA_HEAD_DIM
+    n = cfg.ssm_state
+    ks = split_keys(key, 4)
+    # in_proj emits z (gate), x, B, C, dt
+    d_in_proj = 2 * inner + 2 * n + n_heads
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_WIDTH, inner + 2 * n),
+                                     dtype=jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((inner + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(ks[2], inner, d, dtype),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan (Mamba2 algorithm 1, state-passing form).
+
+    x: (b, T, H, P); dt: (b, T, H); A: (H,); B, C: (b, T, N).
+    Returns y: (b, T, H, P).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    nc = t // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]          # (b,nc,L,H) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+
+    # intra-chunk (causal masked attention-like term)
+    # decay(i, j) = exp(dA_cs[i] - dA_cs[j]) for i >= j.  Mask BEFORE the
+    # exp: exp(+big) for the i<j entries is inf, and inf*0 poisons the
+    # backward pass with NaNs even though the forward value is masked out.
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (b,nc,L,L)
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]      # (b,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # chunk-final states: S_c = sum_j exp(dA_cs[L-1]-dA_cs[j]) dt_j B_j x_j^T
+    last = dA_cs[:, :, -1:, :]                             # (b,nc,1,H)
+    w = jnp.exp(last - dA_cs) * dtc                        # (b,nc,L,H)
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w, Bc, xc)
+
+    # inter-chunk recurrence: S_{c} (state BEFORE chunk c)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                # (b,nc,H)
+
+    def scan_fn(s_prev, inp):
+        dec, s_new = inp                                   # (b,H), (b,H,N,P)
+        s_next = s_prev * dec[..., None, None] + s_new
+        return s_next, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), x.dtype)
+    _, S_before = jax.lax.scan(
+        scan_fn, s0,
+        (chunk_decay.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    S_before = S_before.transpose(1, 0, 2, 3, 4)           # (b,nc,H,N,P)
+
+    # inter-chunk contribution: y_i += exp(dA_cs[i]) C_i . S_before
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         Cc, S_before, jnp.exp(dA_cs))
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y
+
+
+def _causal_conv(x, w, b, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv, width CONV_WIDTH.  x: (B, T, C); w: (W, C)."""
+    width = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :], xp[:, -(width - 1):, :]
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg,
+                 state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, T, d).  state=None -> training/prefill (chunked scan);
+    state given -> single-token decode (T==1), returns updated state."""
+    b, t, d = x.shape
+    inner = cfg.ssm_expand * d
+    h = inner // MAMBA_HEAD_DIM
+    n = cfg.ssm_state
+    proj = x @ p["in_proj"]
+    # split: z (inner), xBC (inner + 2n), dt (h)
+    z = proj[..., :inner]
+    xbc = proj[..., inner:2 * inner + 2 * n]
+    dt_raw = proj[..., 2 * inner + 2 * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    A = p["A_log"]
+
+    if state is None:
+        xbc_c, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xbc_c = jax.nn.silu(xbc_c)
+        xs = xbc_c[..., :inner].reshape(b, t, h, MAMBA_HEAD_DIM)
+        Bm = xbc_c[..., inner:inner + n]
+        Cm = xbc_c[..., inner + n:]
+        chunk = min(cfg.ssm_chunk, t)
+        assert t % chunk == 0, (t, chunk)
+        y = _ssd_chunked(xs.astype(jnp.float32), dt, A,
+                         Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk)
+        y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+        new_state = None
+    else:
+        xbc_c, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                        tail=state["conv"])
+        xbc_c = jax.nn.silu(xbc_c)
+        xs = xbc_c[..., :inner].reshape(b, t, h, MAMBA_HEAD_DIM)
+        Bm = xbc_c[..., inner:inner + n]
+        Cm = xbc_c[..., inner + n:]
+        # single-step SSM update: S' = exp(dt A) S + dt B x^T ; y = C . S'
+        dA = jnp.exp(dt[:, 0] * (-jnp.exp(A))[None, :])               # (B,H)
+        s = state["ssm"]                                              # (B,H,N,P)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        s = s * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), s)
+        y = y[:, None] + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+        new_state = {"conv": conv_tail, "ssm": s}
+
+    y = y.reshape(b, t, inner)
+    # gated RMSNorm (Mamba2 norm-before-out-proj)
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-5)
+    yn = yn * p["norm_w"].astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = yn.astype(x.dtype) @ p["out_proj"]
+    return out, new_state
+
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    h = inner // MAMBA_HEAD_DIM
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, inner + 2 * cfg.ssm_state),
+                          dtype),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_state, MAMBA_HEAD_DIM),
+                         jnp.float32),
+    }
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory)
+# ===========================================================================
+
+def mlstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    hd = inner // cfg.n_heads
+    ks = split_keys(key, 7)
+    return {
+        "up_l": dense_init(ks[0], d, inner, dtype),      # main branch
+        "up_r": dense_init(ks[1], d, inner, dtype),      # gate branch
+        "wq": dense_init(ks[2], inner, inner, dtype),
+        "wk": dense_init(ks[3], inner, inner, dtype),
+        "wv": dense_init(ks[4], inner, inner, dtype),
+        "w_if": dense_init(ks[5], inner, 2 * cfg.n_heads, dtype=jnp.float32),
+        "b_if": jnp.zeros((2 * cfg.n_heads,), jnp.float32),
+        "norm_w": jnp.ones((inner,), dtype),
+        "down": dense_init(ks[6], inner, d, dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized parallel mLSTM over one chunk.
+
+    q/k/v: (B, H, L, hd); i_gate/f_gate: (B, H, L) log-space gates.
+    Returns y (B, H, L, hd), plus chunk-final (C, n_vec, m) carries.
+    """
+    bsz, h, l, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)                       # (B,H,L)
+    F = jnp.cumsum(logf, axis=-1)                           # prefix sums
+    # D[i,j] = F_i - F_j + i_j  for i >= j
+    D = F[..., :, None] - F[..., None, :] + i_gate[..., None, :]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    D = jnp.where(causal, D, -jnp.inf)
+    m = jnp.maximum(jnp.max(D, axis=-1), 0.0)               # stabilizer (B,H,L)
+    S = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(hd)
+    W = S * jnp.exp(D - m[..., None])
+    n_vec = jnp.maximum(jnp.abs(jnp.sum(W, axis=-1)), jnp.exp(-m))
+    y = jnp.einsum("bhij,bhjd->bhid", W, v) / n_vec[..., None]
+    return y
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Pre-up-projected mLSTM block: x (B, T, d)."""
+    b, t, d = x.shape
+    inner = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = inner // nh
+    xl = x @ p["up_l"]
+    xr = jax.nn.silu(x @ p["up_r"])
+    q = (xl @ p["wq"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = (xl @ p["wk"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = (xl @ p["wv"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    gates = xl.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_gate = gates[..., :nh].transpose(0, 2, 1)             # (B,H,T)
+    f_gate = gates[..., nh:].transpose(0, 2, 1)
+
+    if state is None:
+        # chunkwise: full parallel inside chunks of ssm_chunk
+        chunk = min(cfg.ssm_chunk, t)
+        assert t % chunk == 0
+        nc = t // chunk
+        if nc == 1:
+            y = _mlstm_parallel(q.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), i_gate, f_gate)
+        else:
+            # sequential over chunks with recurrent (C, n, m) carry
+            qc = q.reshape(b, nh, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+            kc = k.reshape(b, nh, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+            vc = v.reshape(b, nh, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+            ic = i_gate.reshape(b, nh, nc, chunk).transpose(2, 0, 1, 3)
+            fc = f_gate.reshape(b, nh, nc, chunk).transpose(2, 0, 1, 3)
+
+            def chunk_step(carry, inp):
+                C, nv, mm = carry
+                qi, ki, vi, ii, fi = inp
+                qi = qi.astype(jnp.float32)
+                ki = ki.astype(jnp.float32)
+                vi = vi.astype(jnp.float32)
+                logf = jax.nn.log_sigmoid(fi)
+                F = jnp.cumsum(logf, axis=-1)
+                # intra-chunk
+                D = F[..., :, None] - F[..., None, :] + ii[..., None, :]
+                causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+                D = jnp.where(causal, D, -jnp.inf)
+                # inter-chunk decay for position i: F_i (+ carry m)
+                d_in = F + mm[..., None]
+                m_new = jnp.maximum(jnp.max(D, -1), d_in)
+                m_new = jnp.maximum(m_new, 0.0)
+                qs = qi / math.sqrt(hd)
+                S = jnp.einsum("bhid,bhjd->bhij", qs, ki)
+                W = S * jnp.exp(D - m_new[..., None])
+                h_intra = jnp.einsum("bhij,bhjd->bhid", W, vi)
+                l_intra = jnp.sum(W, axis=-1)
+                dec = jnp.exp(d_in - m_new)                 # (B,H,L)
+                h_inter = jnp.einsum("bhid,bhde,bhi->bhie", qs, C, dec)
+                l_inter = jnp.einsum("bhid,bhd,bhi->bhi", qs, nv, dec)
+                l_tot = jnp.maximum(jnp.abs(l_intra + l_inter),
+                                    jnp.exp(-m_new))
+                y = (h_intra + h_inter) / l_tot[..., None]
+                # update carry to end of chunk (C is stored exp(-m)-scaled)
+                F_last = F[..., -1:]
+                m_carry = jnp.maximum(mm + F_last[..., 0],
+                                      jnp.max(ii + F_last - F, -1))
+                scale_old = jnp.exp(mm + F_last[..., 0] - m_carry)
+                add_w = jnp.exp(ii + F_last - F - m_carry[..., None])
+                C_new = C * scale_old[..., None, None] + jnp.einsum(
+                    "bhj,bhjd,bhje->bhde", add_w, ki, vi)
+                nv_new = nv * scale_old[..., None] + jnp.einsum(
+                    "bhj,bhjd->bhd", add_w, ki)
+                return (C_new, nv_new, m_carry), y
+
+            c0 = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+                  jnp.zeros((b, nh, hd), jnp.float32),
+                  jnp.full((b, nh), -1e30, jnp.float32))
+            _, ys = jax.lax.scan(chunk_step, c0, (qc, kc, vc, ic, fc))
+            y = ys.transpose(1, 2, 0, 3, 4).reshape(b, nh, t, hd)
+        new_state = None
+    else:
+        # O(1) decode: C' = f C + i k v^T ; y = q.C / max(|q.n|, e^-m)
+        C, nv, mm = state["C"], state["n"], state["m"]
+        logf = jax.nn.log_sigmoid(f_gate[..., 0])           # (B,H)
+        ii = i_gate[..., 0]
+        m_new = jnp.maximum(logf + mm, ii)
+        fs = jnp.exp(logf + mm - m_new)
+        is_ = jnp.exp(ii - m_new)
+        k0 = k[:, :, 0].astype(jnp.float32)
+        v0 = v[:, :, 0].astype(jnp.float32)
+        q0 = q[:, :, 0].astype(jnp.float32)
+        C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k0, v0)
+        nv = nv * fs[..., None] + is_[..., None] * k0
+        num = jnp.einsum("bhd,bhde->bhe", q0 / math.sqrt(hd), C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                             q0 / math.sqrt(hd), nv)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, :, None]              # (B,H,1,hd)
+        new_state = {"C": C, "n": nv, "m": m_new}
+
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner)
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-5)
+    yn = yn.astype(x.dtype) * p["norm_w"]
+    return (yn * xr) @ p["down"], new_state
+
+
+def mlstm_state_init(cfg, batch: int) -> Dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    hd = inner // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+    }
+
+
+def slstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    ks = split_keys(key, 3)
+    # 4 gates (i, f, z, o), input + recurrent weights
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, dtype),
+        "w_h": dense_init(ks[1], d, 4 * d, dtype, scale=1.0 / math.sqrt(d)),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm_w": jnp.ones((d,), dtype),
+        "down": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_apply(p: Params, x: jax.Array, cfg,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Scalar-memory sLSTM with exponential gating; sequential scan over T
+    (the recurrent h-feedback makes it non-parallelizable — by design)."""
+    b, t, d = x.shape
+    gx = (x @ p["w_x"]).astype(jnp.float32)                 # (B,T,4d)
+
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    w_h = p["w_h"].astype(jnp.float32)
+    bias = p["b"]
+
+    def step(carry, gxt):
+        h, c, n, m = carry
+        g = gxt + h @ w_h + bias
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)                     # exp-gate stabilizer
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(gf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        step, (h0, c0, n0, m0), gx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2)                               # (B,T,d)
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-5)
+    out = (yn.astype(x.dtype) * p["norm_w"]) @ p["down"]
+    new_state = None if state is None else {
+        "h": h_f, "c": c_f, "n": n_f, "m": m_f}
+    return out, new_state
+
+
+def slstm_state_init(cfg, batch: int) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, d), jnp.float32), "m": z}

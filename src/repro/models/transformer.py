@@ -1,0 +1,274 @@
+"""Transformer blocks: self/cross-attention decoder blocks, encoder blocks.
+
+Pre-norm residual blocks parameterized entirely by ``ModelConfig`` (GQA via
+n_kv_heads, RoPE theta, sliding window, QKV bias, gated vs plain MLP, MoE).
+Each block has a training/prefill ``apply`` (full sequence) and a
+``decode`` (single token + KV cache) path.
+
+KV caches are per-layer dicts ``{"k": (B, S, Hkv, hd), "v": ...}`` written at
+per-request positions (``cache_len`` is a (B,) vector so ragged serving
+batches work — each aggregated request owns its slot, as in the paper's
+aggregated buffers).  Sliding-window layers use rolling caches of window
+size, which is what bounds ``long_500k`` decode memory for SWA archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models.common import (
+    Params, apply_rope, attention, attn_init, decode_attention, dense_init,
+    layernorm, mlp_apply, mlp_init, out_proj, qkv_proj, rmsnorm, split_keys,
+)
+from repro.models.moe import moe_ffn, moe_init
+
+
+def _norm(p, x, cfg):
+    if isinstance(p, dict):
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p, cfg.norm_eps)
+
+
+def _norm_init(cfg, dtype):
+    if not cfg.mlp_gated:      # GPT-style stacks use LayerNorm
+        return {"w": jnp.ones((cfg.d_model,), dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)}
+    return jnp.ones((cfg.d_model,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# block init
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, dtype, kind: str = "self") -> Params:
+    """kind: self | cross | encoder | moe."""
+    ks = split_keys(key, 3)
+    p: Params = {
+        "ln1": _norm_init(cfg, dtype),
+        "attn": attn_init(ks[0], cfg, dtype, cross=(kind == "cross")),
+        "ln2": _norm_init(cfg, dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+    return p
+
+
+def decoder_layer_init(key, cfg, dtype) -> Params:
+    """Decoder-with-cross-attention layer (enc-dec architectures)."""
+    ks = split_keys(key, 2)
+    p = block_init(ks[0], cfg, dtype, kind="self")
+    p["ln_x"] = _norm_init(cfg, dtype)
+    p["xattn"] = attn_init(ks[1], cfg, dtype, cross=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence apply (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _ffn(p, x, cfg, use_pallas_moe: bool = False):
+    h = _norm(p["ln2"], x, cfg)
+    h = constrain(h, "batch", "seq", "embed")
+    if "moe" in p:
+        out = moe_ffn(p["moe"], h, cfg, use_pallas=use_pallas_moe)
+    else:
+        out = mlp_apply(p["mlp"], h, cfg.mlp_gated)
+    # residual stream between blocks is sequence-sharded (Megatron-SP):
+    # XLA reduce-scatters the ffn output and all-gathers at the next block,
+    # which shrinks the per-layer saved activations by the model-axis size.
+    return constrain(x + constrain(out, "batch", "seq", "embed"),
+                     "batch", "seq_sp", "embed")
+
+
+def self_block_apply(p, x, cfg, positions, *, causal: bool = True,
+                     use_rope: bool = True, use_pallas_moe: bool = False):
+    h = _norm(p["ln1"], x, cfg)
+    q, k, v = qkv_proj(p["attn"], h, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    o = attention(q, k, v, causal=causal, q_positions=positions,
+                  kv_positions=positions, sliding_window=cfg.sliding_window)
+    x = constrain(x + constrain(out_proj(p["attn"], o),
+                                "batch", "seq", "embed"),
+                  "batch", "seq_sp", "embed")
+    return _ffn(p, x, cfg, use_pallas_moe)
+
+
+def cross_block_apply(p, x, memory, cfg, *, gated: bool = True,
+                      skip_ffn: bool = False):
+    """Cross-attention block: queries from x, keys/values from memory."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    h = _norm(p["ln1"], x, cfg)
+    hd = cfg.resolved_head_dim
+    q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (memory @ p["attn"]["wk"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    v = (memory @ p["attn"]["wv"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    if "bq" in p["attn"]:
+        q = q + p["attn"]["bq"].reshape(cfg.n_heads, hd)
+        k = k + p["attn"]["bk"].reshape(cfg.n_kv_heads, hd)
+        v = v + p["attn"]["bv"].reshape(cfg.n_kv_heads, hd)
+    o = attention(q, k, v, causal=False,
+                  q_positions=jnp.zeros((s,), jnp.int32),
+                  kv_positions=jnp.zeros((sm,), jnp.int32))
+    o = out_proj(p["attn"], o)
+    if gated and "gate" in p["attn"]:
+        o = jnp.tanh(p["attn"]["gate"]).astype(o.dtype) * o
+    x = x + o
+    if skip_ffn:
+        return x
+    return _ffn(p, x, cfg)
+
+
+def encdec_decoder_apply(p, x, memory, cfg, positions):
+    """Self-attn + cross-attn + FFN decoder layer (enc-dec)."""
+    h = _norm(p["ln1"], x, cfg)
+    q, k, v = qkv_proj(p["attn"], h, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=True, q_positions=positions,
+                  kv_positions=positions)
+    x = x + out_proj(p["attn"], o)
+    # cross attention
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    hd = cfg.resolved_head_dim
+    h = _norm(p["ln_x"], x, cfg)
+    q = (h @ p["xattn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (memory @ p["xattn"]["wk"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    v = (memory @ p["xattn"]["wv"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    o = attention(q, k, v, causal=False,
+                  q_positions=jnp.zeros((s,), jnp.int32),
+                  kv_positions=jnp.zeros((sm,), jnp.int32))
+    x = x + out_proj(p["xattn"], o)
+    return _ffn(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def kv_cache_init(cfg, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def _cache_write(cache, k_new, v_new, cache_len, sliding_window: int):
+    """Write one token per request at its own position (rolling for SWA)."""
+    b = k_new.shape[0]
+    s = cache["k"].shape[1]
+    pos = cache_len % s if sliding_window else jnp.minimum(cache_len, s - 1)
+    k = cache["k"].at[jnp.arange(b), pos].set(k_new[:, 0])
+    v = cache["v"].at[jnp.arange(b), pos].set(v_new[:, 0])
+    return {"k": k, "v": v}
+
+
+def self_block_decode(p, x, cfg, cache, cache_len, *, use_rope: bool = True,
+                      use_pallas_attn: bool = False):
+    """x: (B, 1, d); cache_len: (B,) tokens already in cache."""
+    b = x.shape[0]
+    h = _norm(p["ln1"], x, cfg)
+    q, k, v = qkv_proj(p["attn"], h, cfg)
+    if use_rope:
+        pos = cache_len[:, None]                      # (B, 1) absolute
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    cache = _cache_write(cache, k, v, cache_len, cfg.sliding_window)
+    s = cache["k"].shape[1]
+    if cfg.sliding_window:
+        # rolling cache: all written slots are valid
+        valid_len = jnp.minimum(cache_len + 1, s)
+    else:
+        valid_len = cache_len + 1
+    if use_pallas_attn:
+        from repro.kernels.ops import decode_attention as da
+        o = da(q[:, 0], cache["k"], cache["v"], valid_len)[:, None]
+    else:
+        from repro.kernels.ref import decode_attention_ref
+        o = decode_attention_ref(q[:, 0], cache["k"], cache["v"],
+                                 valid_len)[:, None]
+    x = x + out_proj(p["attn"], o)
+    h = _norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        out = moe_ffn(p["moe"], h, cfg)
+    else:
+        out = mlp_apply(p["mlp"], h, cfg.mlp_gated)
+    return x + out, cache
+
+
+def cross_block_decode(p, x, cfg, cross_kv, *, gated: bool = True,
+                       skip_ffn: bool = False):
+    """Decode against precomputed (fixed) cross-attention KV."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h = _norm(p["ln1"], x, cfg)
+    q = (h @ p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    sm = cross_kv["k"].shape[1]
+    full = jnp.full((b,), sm, jnp.int32)
+    from repro.kernels.ref import decode_attention_ref
+    o = decode_attention_ref(q[:, 0], cross_kv["k"], cross_kv["v"], full)[:, None]
+    o = out_proj(p["attn"], o)
+    if gated and "gate" in p["attn"]:
+        o = jnp.tanh(p["attn"]["gate"]).astype(o.dtype) * o
+    x = x + o
+    if skip_ffn:
+        return x
+    h = _norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        out = moe_ffn(p["moe"], h, cfg)
+    else:
+        out = mlp_apply(p["mlp"], h, cfg.mlp_gated)
+    return x + out
+
+
+def cross_kv_precompute(p, memory, cfg) -> Dict[str, jax.Array]:
+    b, sm, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = (memory @ p["attn"]["wk"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    v = (memory @ p["attn"]["wv"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def encdec_decoder_decode(p, x, cfg, cache, cache_len, cross_kv):
+    b = x.shape[0]
+    h = _norm(p["ln1"], x, cfg)
+    q, k, v = qkv_proj(p["attn"], h, cfg)
+    pos = cache_len[:, None]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    cache = _cache_write(cache, k, v, cache_len, 0)
+    from repro.kernels.ref import decode_attention_ref
+    o = decode_attention_ref(q[:, 0], cache["k"], cache["v"],
+                             cache_len + 1)[:, None]
+    x = x + out_proj(p["attn"], o)
+    # cross
+    h = _norm(p["ln_x"], x, cfg)
+    hd = cfg.resolved_head_dim
+    q = (h @ p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    sm = cross_kv["k"].shape[1]
+    o = decode_attention_ref(q[:, 0], cross_kv["k"], cross_kv["v"],
+                             jnp.full((b,), sm, jnp.int32))[:, None]
+    x = x + out_proj(p["xattn"], o)
+    h = _norm(p["ln2"], x, cfg)
+    out = mlp_apply(p["mlp"], h, cfg.mlp_gated)
+    return x + out, cache
+
+
+def xattn_kv_precompute(p, memory, cfg) -> Dict[str, jax.Array]:
+    b, sm, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = (memory @ p["xattn"]["wk"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    v = (memory @ p["xattn"]["wv"]).reshape(b, sm, cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    OptConfig, opt_init, opt_update, cosine_lr, global_norm, clip_by_global_norm,
+)
+from repro.optim.compression import (
+    int8_compress, int8_decompress, compressed_allreduce,
+)
+
+__all__ = [
+    "OptConfig", "opt_init", "opt_update", "cosine_lr", "global_norm",
+    "clip_by_global_norm", "int8_compress", "int8_decompress",
+    "compressed_allreduce",
+]

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces the
+# 512-device host platform (per the dry-run spec, NOT set globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
