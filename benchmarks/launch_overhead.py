@@ -1,0 +1,255 @@
+"""Launch-overhead benchmark: host staging vs. the device-resident slot ring.
+
+Measures, per RK3 time-step on the Sedov scenario, for every strategy /
+staging combination:
+
+* wall time per step (the Table III metric),
+* kernel launches per step,
+* host *staging* time (slicing, stacking, ring writes — everything spent
+  preparing inputs before dispatch),
+* host *dispatch* time (enqueueing compiled programs).
+
+The ``*_seed`` rows reproduce the seed implementation exactly — s2 as
+``subs[i:i+1]`` slicing + per-iteration ``jnp.concatenate``, s3 as
+``staging="host"`` (slice -> host-stack -> launch) — so the perf trajectory
+of the slot-ring rework is measurable from this PR onward.  The ``fused_scan``
+row is the new upper bound: whole RK3 trajectories as ONE ``lax.scan``
+program.
+
+  PYTHONPATH=src python benchmarks/launch_overhead.py [--full] [--steps N]
+
+Writes BENCH_launch_overhead.json at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AggregationConfig, HydroConfig
+from repro.core.executor import ExecutorPool
+from repro.core.strategies import HydroStrategyRunner
+from repro.hydro.state import assemble_global, extract_subgrids, sedov_init
+from repro.hydro.stepper import courant_dt
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_launch_overhead.json")
+
+
+class SeedS2Runner:
+    """The seed's s2 hot loop, verbatim semantics: slice each task out of
+    the sub-grid array on the host queue, launch, then re-assemble with one
+    O(n) ``jnp.concatenate`` per iteration.  Kept here (not in repro.core)
+    purely as the measurable baseline."""
+
+    def __init__(self, cfg: HydroConfig, n_executors: int = 1):
+        self.cfg = cfg
+        ref = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
+        self._jit_batched = ref._jit_batched
+        self.pool = ExecutorPool(n_executors)
+        self.staging_s = 0.0
+        self.launches = 0
+
+    def rhs(self, u):
+        subs = extract_subgrids(u, self.cfg.subgrid, self.cfg.ghost,
+                                "outflow")
+        n = subs.shape[0]
+        results = [None] * n
+        for i in range(n):
+            t0 = time.perf_counter()
+            task = subs[i:i + 1]
+            self.staging_s += time.perf_counter() - t0
+            results[i] = self.pool.get().launch(self._jit_batched, task)
+        self.launches += n
+        t0 = time.perf_counter()
+        out = jnp.concatenate(results)
+        self.staging_s += time.perf_counter() - t0
+        return assemble_global(out, self.cfg.subgrid)
+
+    def rk3_step(self, u, dt):
+        l0 = self.rhs(u)
+        u1 = u + dt * l0
+        l1 = self.rhs(u1)
+        u2 = 0.75 * u + 0.25 * (u1 + dt * l1)
+        l2 = self.rhs(u2)
+        return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
+
+
+class SeedS3Runner:
+    """The seed's s3 rhs, verbatim semantics: per-task ``subs[i]`` slicing
+    into the submit queue (host staging re-stacks each bucket), then
+    per-future slice + ``jnp.stack`` output assembly."""
+
+    def __init__(self, cfg: HydroConfig, n_executors: int, max_agg: int,
+                 watermark: int = 1):
+        from repro.core.aggregation import AggregationExecutor
+        self.cfg = cfg
+        ref = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
+        agg = AggregationConfig(strategy="s3", n_executors=n_executors,
+                                max_aggregated=max_agg, staging="host",
+                                launch_watermark=watermark)
+        self.exe = AggregationExecutor(ref.batched_body, agg,
+                                       name="seed_s3")
+        self.staging_s = 0.0
+
+    def rhs(self, u):
+        subs = extract_subgrids(u, self.cfg.subgrid, self.cfg.ghost,
+                                "outflow")
+        n = subs.shape[0]
+        futs = [self.exe.submit(subs[i]) for i in range(n)]
+        self.exe.flush()
+        t0 = time.perf_counter()
+        out = jnp.stack([f.result() for f in futs])   # seed output assembly
+        self.staging_s += time.perf_counter() - t0
+        return assemble_global(out, self.cfg.subgrid)
+
+    def rk3_step(self, u, dt):
+        l0 = self.rhs(u)
+        u1 = u + dt * l0
+        l1 = self.rhs(u1)
+        u2 = 0.75 * u + 0.25 * (u1 + dt * l1)
+        l2 = self.rhs(u2)
+        return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
+
+
+def _time_runner(step_fn, u, dt, steps: int, repeats: int = 1) -> float:
+    """Best-of-``repeats`` mean step time (min filters scheduler noise —
+    this box shows ±20% run-to-run variance on identical programs)."""
+    best = float("inf")
+    for _ in range(repeats):
+        out = u
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            out = step_fn(out, dt)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / steps)
+    return best
+
+
+def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
+    cfg = HydroConfig(subgrid=8, ghost=3, levels=levels)
+    st = sedov_init(cfg)
+    dt = courant_dt(st.u, cfg)
+    n = cfg.n_subgrids
+    rows = []
+
+    def record(tag, sec, launches, staging_s, dispatch_s: Optional[float]):
+        rows.append({
+            "config": tag, "n_subgrids": n,
+            "ms_per_step": round(sec * 1e3, 3),
+            "launches_per_step": launches,
+            "staging_ms_per_step": None if staging_s is None
+            else round(staging_s * 1e3 / steps, 3),
+            "dispatch_ms_per_step": None if dispatch_s is None
+            else round(dispatch_s * 1e3 / steps, 3),
+        })
+        print(f"  {tag:24s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
+              f"staging {rows[-1]['staging_ms_per_step']} ms")
+
+    # -- seed baselines ---------------------------------------------------
+    seed2 = SeedS2Runner(cfg, n_executors=4)
+    seed2.rk3_step(st.u, dt)                      # warmup
+    seed2.staging_s = 0.0
+    for e in seed2.pool.executors:
+        e.dispatch_s = 0.0
+    sec = _time_runner(seed2.rk3_step, st.u, dt, steps, repeats)
+    record("s2_seed_hoststage", sec, 3 * n,
+           seed2.staging_s / repeats, seed2.pool.total_dispatch_s / repeats)
+
+    # launch_watermark is pinned high on the s3 A/B rows so both staging
+    # modes drain with the IDENTICAL greedy bucket sequence — watermark
+    # launches depend on busy-detection timing, which staging cost itself
+    # perturbs (the comparison would otherwise measure emergent launch
+    # policy, not staging)
+    WM = 10 ** 9
+    for tag, n_exec in [("s3_seed_hoststage", 1),
+                        ("s2s3_seed_hoststage", 4)]:
+        seed3 = SeedS3Runner(cfg, n_executors=n_exec, max_agg=16,
+                             watermark=WM)
+        seed3.rk3_step(st.u, dt)                  # warmup
+        seed3.staging_s = 0.0
+        seed3.exe.stats["staging_s"] = 0.0
+        seed3.exe.stats["launches"] = 0
+        for e in seed3.exe.pool.executors:
+            e.dispatch_s = 0.0
+        sec = _time_runner(seed3.rk3_step, st.u, dt, steps, repeats)
+        record(tag, sec,
+               seed3.exe.stats["launches"] // (steps * repeats),
+               (seed3.staging_s + seed3.exe.stats["staging_s"]) / repeats,
+               seed3.exe.pool.total_dispatch_s / repeats)
+
+    for tag, strat, n_exec, max_agg, wm in [
+        ("s2_slotring", "s2", 4, 1, 1),
+        ("s3_slotring", "s3", 1, 16, WM),
+        ("s2s3_slotring", "s2+s3", 4, 16, WM),
+        ("fused_bound", "fused", 1, 1, 1),
+    ]:
+        agg = AggregationConfig(strategy=strat, n_executors=n_exec,
+                                max_aggregated=max_agg, staging="device",
+                                launch_watermark=wm)
+        r = HydroStrategyRunner(cfg, agg)
+        r.rk3_step(st.u, dt)                      # warmup/compile
+        r.stats["staging_s"] = 0.0
+        if r._agg_exec is not None:
+            r._agg_exec.stats["staging_s"] = 0.0
+            r._agg_exec.stats["launches"] = 0
+        for e in r.pool.executors:
+            e.dispatch_s = 0.0
+        sec = _time_runner(r.rk3_step, st.u, dt, steps, repeats)
+        staging_s = (r._agg_exec.stats["staging_s"]
+                     if r._agg_exec is not None else 0.0)
+        launches = (3 * n if strat == "s2"
+                    else 3 if strat == "fused"
+                    else r._agg_exec.stats["launches"] // (steps * repeats))
+        record(tag, sec, launches, staging_s / repeats,
+               r.pool.total_dispatch_s / repeats)
+
+    # -- scan trajectory: whole multi-step RK3 as one program -------------
+    r = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
+    r.rk3_trajectory(st.u, dt, steps)             # warmup/compile
+    best = float("inf")
+    for _ in range(repeats):
+        jax.block_until_ready(st.u)
+        t0 = time.perf_counter()
+        out = r.rk3_trajectory(st.u, dt, steps)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / steps)
+    record("fused_scan_bound", best, 1.0 / steps, 0.0, None)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact 512 sub-grids (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N timing (filters scheduler noise)")
+    args = ap.parse_args()
+    if args.steps < 1 or args.repeats < 1:
+        ap.error("--steps and --repeats must be >= 1")
+    levels = 3 if args.full else 2
+    print(f"launch_overhead: Sedov, {8 ** 3 * (2 ** levels) ** 3} cells, "
+          f"backend={jax.default_backend()}")
+    rows = run(levels=levels, steps=args.steps, repeats=args.repeats)
+    payload = {
+        "benchmark": "launch_overhead",
+        "backend": jax.default_backend(),
+        "levels": levels,
+        "steps": args.steps,
+        "repeats": args.repeats,
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,10 +45,13 @@ def sweep(levels: int = 2, steps: int = 2, quick: bool = False):
         ("s2s3_exec4_agg16", cfg8, "s2+s3", 4, 16),
         ("fused_bound", cfg8, "fused", 1, 1),   # beyond-paper whole-graph
         ("fused_bound_16", cfg16, "fused", 1, 1),
+        # whole multi-step trajectory as ONE lax.scan program (upper bound)
+        ("fused_scan_bound", cfg8, "fused", 1, 1),
     ]
     if quick:
         grid = [g for g in grid if g[0] in
-                ("s1_8_noagg", "s3_agg16", "s2s3_exec4_agg8", "fused_bound")]
+                ("s1_8_noagg", "s3_agg16", "s2s3_exec4_agg8", "fused_bound",
+                 "fused_scan_bound")]
 
     rows = []
     for tag, cfg, strat, n_exec, max_agg in grid:
@@ -57,15 +60,22 @@ def sweep(levels: int = 2, steps: int = 2, quick: bool = False):
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg)
         runner = HydroStrategyRunner(cfg, agg)
-        runner.rk3_step(st.u, dt)               # warmup/compile
+        use_scan = tag == "fused_scan_bound"
+        if use_scan:
+            runner.rk3_trajectory(st.u, dt, steps)  # warmup/compile
+        else:
+            runner.rk3_step(st.u, dt)               # warmup/compile
         runner.stats["kernel_launches"] = 0
-        sec = runner.time_step(st.u, dt, n_steps=steps)
+        sec = runner.time_step(st.u, dt, n_steps=steps, use_scan=use_scan)
         rows.append({
             "config": tag, "strategy": strat, "subgrid": cfg.subgrid,
             "n_subgrids": cfg.n_subgrids, "executors": n_exec,
             "max_aggregated": max_agg,
+            "staging": agg.staging,
             "ms_per_step": round(sec * 1e3, 2),
-            "launches_per_step": runner.stats["kernel_launches"] // max(steps, 1)
+            # fractional for the scan row: ONE dispatch covers all steps
+            "launches_per_step": round(
+                runner.stats["kernel_launches"] / max(steps, 1), 3)
             if strat != "s3" else runner.stats["kernel_launches"],
         })
         print(f"  {tag:22s} {rows[-1]['ms_per_step']:9.2f} ms/step")

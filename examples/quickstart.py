@@ -4,6 +4,17 @@ Fine-grained tasks (here: tiny per-sub-problem stencils) are submitted to an
 AggregationExecutor; while the device is busy, compatible tasks fuse into one
 bucketed kernel launch — the paper's strategy 3, TPU-native.
 
+Staging is device-resident (DESIGN.md §3): each submission writes its inputs
+into a pre-allocated, double-buffered device *slot ring* via a donated
+in-place update, and every launch reads a zero-copy prefix view of the
+filled slots — no host round-trip on the hot path.  Tasks that are rows of
+an existing device array can skip even that via
+``exe.submit_indexed((parent,), i)``, which stages a whole bucket with one
+gather.  ``AggregationConfig(staging="host")`` selects the legacy
+slice→stack→launch cycle for comparison (see
+benchmarks/launch_overhead.py), and ``exe.warmup(example_args)``
+AOT-compiles every bucket size up front.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax

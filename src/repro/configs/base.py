@@ -165,6 +165,11 @@ class AggregationConfig:
     max_aggregated: int = 32
     buckets: Tuple[int, ...] = ()     # () -> powers of two up to max_aggregated
     launch_watermark: int = 1         # queue depth that forces a launch
+    # How aggregated task inputs reach the bucketed kernel (DESIGN.md §3):
+    # "device" — slot-ring / indexed-gather staging, fully device-resident;
+    # "host"   — the seed's slice -> host-stack -> launch cycle (kept as the
+    #            measurable baseline for benchmarks/launch_overhead.py).
+    staging: str = "device"
 
     def bucket_sizes(self) -> Tuple[int, ...]:
         if self.buckets:

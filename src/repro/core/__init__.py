@@ -6,14 +6,16 @@
 * ``strategies``  — S1/S2/S3/fused strategy runners over the hydro tasks
 """
 from repro.core.aggregation import (
-    AggregationExecutor, TaskFuture, aggregation_region, reset_regions,
+    AggregationExecutor, SlotView, TaskFuture, aggregation_region,
+    gather_futures, reset_regions,
 )
-from repro.core.buffers import DEFAULT_POOL, BufferPool
+from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
 from repro.core.strategies import HydroStrategyRunner, xla_task_body
 
 __all__ = [
-    "AggregationExecutor", "TaskFuture", "aggregation_region", "reset_regions",
-    "BufferPool", "DEFAULT_POOL", "DeviceExecutor", "ExecutorPool",
+    "AggregationExecutor", "SlotView", "TaskFuture", "aggregation_region",
+    "gather_futures", "reset_regions",
+    "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
     "HydroStrategyRunner", "xla_task_body",
 ]

@@ -11,7 +11,19 @@ aggregation count is realized as a small set of pre-compiled *buckets*
 (powers of two up to the cap).  A queue of length k is drained greedily with
 the largest bucket <= k; because bucket 1 exists, no padding is ever needed
 and results are *bit-identical* to unaggregated execution (the equivalence
-invariant tested in tests/test_aggregation.py).
+invariant tested in tests/test_aggregation.py and tests/test_slot_ring.py).
+
+Staging (DESIGN.md §3): the hot path is device-resident end to end.  Task
+inputs either
+
+* land in a pre-allocated :class:`~repro.core.buffers.SlotRing` via donated
+  ``lax.dynamic_update_slice`` writes (concrete per-task arrays), or
+* stay where they already live and are referenced by a :class:`SlotView`
+  ``(parent, index)``; a launch then performs ONE ``jnp.take`` gather inside
+  the bucketed program (index-batched staging, zero per-task slicing).
+
+The seed's slice -> host-stack -> launch cycle survives as
+``staging="host"`` so benchmarks/launch_overhead.py can measure the win.
 
 The paper's "Single-GPU-workload-Multiple-Tasks" constraint (all aggregated
 tasks execute the same allocation/launch sequence) is enforced *statically*
@@ -20,8 +32,8 @@ so divergence between aggregated tasks is impossible by construction.
 """
 from __future__ import annotations
 
-import contextlib
-from dataclasses import dataclass, field
+import time
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -30,12 +42,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AggregationConfig
-from repro.core.buffers import DEFAULT_POOL, BufferPool
-from repro.core.executor import DeviceExecutor, ExecutorPool
+from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
+from repro.core.executor import ExecutorPool
 
 
 class TaskFuture:
-    """HPX-future analogue: resolves to one task's slice of a batched launch."""
+    """HPX-future analogue: resolves to one task's slice of a batched launch.
+
+    Resolution is lazy twice over: ``_fulfil`` only records (batch, slot) —
+    no per-slot ``tree_map`` happens until ``result()`` is actually read —
+    and callers that want the whole batch back should use
+    :func:`gather_futures`, which recognises futures covering a full launch
+    and returns the batched output itself with zero copies.
+    """
 
     __slots__ = ("_value", "_batch", "_slot", "_done")
 
@@ -61,10 +80,66 @@ class TaskFuture:
         return self._value
 
 
+def gather_futures(futs: Sequence[TaskFuture]) -> Any:
+    """Assemble many futures' results into one batched array, lazily.
+
+    Futures fulfilled by the same launch share one batched output; a run of
+    such futures in slot order contributes the batch itself (zero-copy).
+    Out-of-order runs become a single ``jnp.take``; distinct launches are
+    joined with one ``jnp.concatenate``.  This replaces the seed's
+    per-future slice + re-stack (2n device ops for n tasks) with O(launches)
+    ops.
+    """
+    if not futs:
+        raise ValueError("gather_futures needs at least one future")
+    parts = []
+    i = 0
+    while i < len(futs):
+        f = futs[i]
+        if not f._done:
+            raise RuntimeError("task not launched yet — call executor.flush()")
+        if f._batch is None:          # already resolved individually
+            parts.append(jax.tree_util.tree_map(lambda x: x[None], f.result()))
+            i += 1
+            continue
+        batch = f._batch
+        slots = []
+        while i < len(futs) and futs[i]._batch is batch:
+            slots.append(futs[i]._slot)
+            i += 1
+        n_slots = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        if slots == list(range(n_slots)):
+            parts.append(batch)       # the whole launch, in order: zero-copy
+        else:
+            idx = jnp.asarray(slots, jnp.int32)
+            parts.append(jax.tree_util.tree_map(
+                lambda x: jnp.take(x, idx, axis=0), batch))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *parts)
+
+
+class SlotView:
+    """Zero-copy task-input reference: ``parent[index]``, never sliced.
+
+    Submitting SlotViews lets ``_launch`` stage a whole bucket with ONE
+    ``jnp.take`` over the already-device-resident parent instead of n
+    per-task slices — the index-batched staging mode.
+    """
+
+    __slots__ = ("parent", "index")
+
+    def __init__(self, parent: jax.Array, index: int):
+        self.parent = parent
+        self.index = index
+
+
 @dataclass
 class _Pending:
-    args: Tuple[Any, ...]
     future: TaskFuture
+    slot: int = -1                               # ring mode: slot in the ring
+    views: Optional[Tuple[SlotView, ...]] = None  # ref mode
+    args: Optional[Tuple[Any, ...]] = None        # host mode
 
 
 class AggregationExecutor:
@@ -79,7 +154,9 @@ class AggregationExecutor:
     config : AggregationConfig
         ``max_aggregated`` caps the bucket size (the paper's second launch
         criterion); ``n_executors`` sizes the underlying executor pool
-        (combining strategy 3 with strategy 2, as the paper's best rows do).
+        (combining strategy 3 with strategy 2, as the paper's best rows do);
+        ``staging`` selects device-resident (slot ring / indexed gather) or
+        the seed's host staging.
     """
 
     def __init__(self, batched_fn: Callable, config: AggregationConfig,
@@ -91,40 +168,155 @@ class AggregationExecutor:
         self.config = config
         self.pool = pool or ExecutorPool(config.n_executors)
         self.buffers = buffer_pool or DEFAULT_POOL
+        self.ring: Optional[SlotRing] = None
         self._queue: List[_Pending] = []
         self._buckets = tuple(sorted(config.bucket_sizes()))
-        self._compiled: Dict[int, Callable] = {}
+        self._compiled: Dict[Tuple[str, int], Callable] = {}
         self._batched_fn = batched_fn
         self._donate = donate
+        self._staging = getattr(config, "staging", "device")
+        if self._staging not in ("device", "host"):
+            raise ValueError(f"unknown staging mode {self._staging!r}")
+        # shared shape-polymorphic wrappers (jit re-specializes per shape,
+        # so ONE wrapper serves every bucket / parent shape)
+        self._host_jit = jax.jit(
+            self._batched_fn, donate_argnums=(0,) if donate else ())
+        self._gather_jit = jax.jit(self._apply_gathered)
         # statistics for the benchmark tables
-        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {}}
+        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
+                      "staging_s": 0.0}
 
-    # -- compilation cache (pre-compiling all buckets = CPPuddle's
-    #    startup-time executor allocation; lazy by default) ---------------
-    def compiled_for(self, bucket: int) -> Callable:
-        fn = self._compiled.get(bucket)
+    # -- bucketed programs -------------------------------------------------
+    def _apply_gathered(self, idx, *parents):
+        """Index-batched staging: one gather feeds the aggregation body."""
+        return self._batched_fn(*(jnp.take(p, idx, axis=0) for p in parents))
+
+    def _apply_ring_prefix(self, bucket: int, start, *rings):
+        """Ring staging: the bucket reads a zero-copy view of the filled
+        prefix [start, start+bucket) straight out of the slot ring."""
+        sliced = tuple(jax.lax.dynamic_slice_in_dim(r, start, bucket, axis=0)
+                       for r in rings)
+        return self._batched_fn(*sliced)
+
+    # -- compilation cache -------------------------------------------------
+    # Each bucket size is a genuinely distinct XLA program (static shapes),
+    # cached under ("ring"|"host", bucket).  ``warmup`` replaces the lazy
+    # jit wrappers with AOT ``.lower().compile()`` executables so the first
+    # submission wave never hits the tracer (CPPuddle's startup-time
+    # executor allocation analogue).
+    def compiled_for(self, bucket: int, mode: str = "ring") -> Callable:
+        # "ring" entries may be AOT-specialized to the ring buffer shapes by
+        # warmup; "prefix" entries serve arbitrary parents (shape-polymorphic
+        # jit) for contiguous SlotView runs.
+        key = (mode, bucket)
+        fn = self._compiled.get(key)
         if fn is None:
-            fn = jax.jit(self._batched_fn,
-                         donate_argnums=(0,) if self._donate else ())
-            self._compiled[bucket] = fn
+            if mode in ("ring", "prefix"):
+                fn = jax.jit(partial(self._apply_ring_prefix, bucket))
+            else:
+                fn = self._host_jit
+            self._compiled[key] = fn
         return fn
 
-    def warmup(self, example_args: Tuple[Any, ...]) -> None:
-        """Pre-compile every bucket size (amortized startup, like stream
-        pre-allocation in CPPuddle)."""
-        for b in self._buckets:
-            stacked = tuple(
-                jnp.broadcast_to(a[None], (b,) + tuple(np.shape(a)))
-                for a in example_args)
-            jax.block_until_ready(self.compiled_for(b)(*stacked))
+    def _ensure_ring(self, example_args: Sequence[Any]) -> SlotRing:
+        if self.ring is None:
+            self.ring = SlotRing(self.config.max_aggregated, example_args)
+        return self.ring
 
-    # -- submission API ---------------------------------------------------
+    def warmup(self, example_args: Tuple[Any, ...]) -> None:
+        """AOT pre-compile every bucket size (amortized startup, like stream
+        pre-allocation in CPPuddle).
+
+        Buckets are lowered with ``.lower().compile()`` — no example
+        execution, no broadcast staging, and no tracer hit on the first
+        real submission.  (Gather-mode programs specialize on the parent
+        array's shape, which is only known at submit time; they stay lazily
+        jitted.)
+        """
+        specs = [jax.ShapeDtypeStruct(np.shape(a), jnp.asarray(a).dtype)
+                 for a in example_args]
+        start = jax.ShapeDtypeStruct((), jnp.int32)
+        if self._staging == "device":
+            ring = self._ensure_ring(example_args)
+            ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
+                          for r in ring.buffers()]
+            for b in self._buckets:
+                fn = jax.jit(partial(self._apply_ring_prefix, b))
+                self._compiled[("ring", b)] = fn.lower(
+                    start, *ring_specs).compile()
+        else:
+            for b in self._buckets:
+                stacked = tuple(
+                    jax.ShapeDtypeStruct((b,) + s.shape, s.dtype)
+                    for s in specs)
+                self._compiled[("host", b)] = self._host_jit.lower(
+                    *stacked).compile()
+
+    # -- submission API ----------------------------------------------------
     def submit(self, *args) -> TaskFuture:
+        """Queue one task.  Args are either concrete per-task arrays (staged
+        into the slot ring) or all :class:`SlotView` references (staged by a
+        single gather at launch)."""
         fut = TaskFuture()
-        self._queue.append(_Pending(args=args, future=fut))
+        is_ref = bool(args) and all(isinstance(a, SlotView) for a in args)
+        if is_ref and self._staging == "device":
+            if any(v.index != args[0].index for v in args[1:]):
+                raise ValueError(
+                    "SlotView args of one task must share one index — a "
+                    "launch gathers the SAME slot from every parent "
+                    "(use submit_indexed)")
+            entry = _Pending(future=fut, views=tuple(args))
+        elif self._staging == "host" or not args:
+            args = tuple(a.parent[a.index] if isinstance(a, SlotView) else a
+                         for a in args)
+            entry = _Pending(future=fut, args=args)
+        else:
+            args = tuple(a.parent[a.index] if isinstance(a, SlotView) else a
+                         for a in args)
+            t0 = time.perf_counter()
+            ring = self._ensure_ring(args)
+            if ring.fill >= ring.capacity:
+                # watermark remainders left a partial prefix consumed; slide
+                # the live tail to the front (one fused device op)
+                first = self._queue[0].slot if self._queue else ring.fill
+                ring.compact(first)
+                for p in self._queue:
+                    p.slot -= first
+            entry = _Pending(future=fut, slot=ring.write(args))
+            self.stats["staging_s"] += time.perf_counter() - t0
+        self._check_mode(entry)
+        self._queue.append(entry)
         self.stats["submitted"] += 1
         self._maybe_launch()
         return fut
+
+    def submit_indexed(self, parents: Tuple[jax.Array, ...],
+                       index: int) -> TaskFuture:
+        """Sugar: submit task ``i`` whose j-th arg is ``parents[j][i]``."""
+        return self.submit(*(SlotView(p, index) for p in parents))
+
+    def _check_mode(self, entry: _Pending) -> None:
+        """A bucket must stage uniformly: same mode, and for ref entries the
+        same parent arrays (a launch gathers from ONE parent set).  Launch
+        what's queued before admitting an incompatible entry."""
+        if not self._queue:
+            return
+        head = self._queue[0]
+        compatible = self._entry_mode(head) == self._entry_mode(entry)
+        if compatible and entry.views is not None:
+            compatible = all(a.parent is b.parent
+                             for a, b in zip(head.views, entry.views))
+        if not compatible:
+            while self._queue:
+                self._launch(self._largest_bucket(len(self._queue)))
+
+    @staticmethod
+    def _entry_mode(entry: _Pending) -> str:
+        if entry.views is not None:
+            return "ref"
+        if entry.args is not None:
+            return "host"
+        return "ring"
 
     def _maybe_launch(self) -> None:
         """The paper's launch policy: launch when (a) the cap is reached, or
@@ -147,20 +339,41 @@ class AggregationExecutor:
 
     def _launch(self, k: int) -> None:
         tasks, self._queue = self._queue[:k], self._queue[k:]
-        n_args = len(tasks[0].args)
-        stacked = []
-        for j in range(n_args):
-            parts = [t.args[j] for t in tasks]
-            if k == 1:
-                stacked.append(jnp.asarray(parts[0])[None])
-            elif isinstance(parts[0], jax.Array):
-                stacked.append(jnp.stack(parts))
+        mode = self._entry_mode(tasks[0])
+        t0 = time.perf_counter()
+        if mode == "ref":
+            indices = [t.views[0].index for t in tasks]
+            parents = tuple(v.parent for v in tasks[0].views)
+            if indices == list(range(indices[0], indices[0] + k)):
+                # contiguous slot run: one dynamic slice of the parent (the
+                # parent IS the ring) — no gather, no index array
+                fn = self.compiled_for(k, "prefix")
+                call_args = (jnp.int32(indices[0]),) + parents
             else:
-                stacked.append(jnp.asarray(self.buffers.stage(parts)))
+                idx = jnp.asarray(indices, jnp.int32)
+                fn, call_args = self._gather_jit, (idx,) + parents
+        elif mode == "ring":
+            fn = self.compiled_for(k, "ring")
+            call_args = (jnp.int32(tasks[0].slot),) + self.ring.buffers()
+        else:
+            stacked = []
+            for j in range(len(tasks[0].args)):
+                parts = [t.args[j] for t in tasks]
+                if k == 1:
+                    stacked.append(jnp.asarray(parts[0])[None])
+                elif isinstance(parts[0], jax.Array):
+                    stacked.append(jnp.stack(parts))
+                else:
+                    stacked.append(jnp.asarray(self.buffers.stage(parts)))
+            fn = self._compiled.get(("host", k), self._host_jit)
+            call_args = tuple(stacked)
+        self.stats["staging_s"] += time.perf_counter() - t0
         exe = self.pool.get()
-        out = exe.launch(self.compiled_for(k), *stacked)
+        out = exe.launch(fn, *call_args)
         for slot, t in enumerate(tasks):
             t.future._fulfil(out, slot)
+        if mode == "ring" and not self._queue:
+            self.ring.swap()      # in-flight launch keeps the old buffer
         self.stats["launches"] += 1
         hist = self.stats["aggregated_hist"]
         hist[k] = hist.get(k, 0) + 1

@@ -1,20 +1,32 @@
-"""Recycled staging-buffer pool (the CPPuddle allocator analogue).
+"""Staging buffers: the device-resident slot ring + the host slab recycler.
 
 The paper: device mallocs synchronize the whole GPU, so CPPuddle recycles
 buffers between tasks instead of freeing them.  Under JAX the device-side
-analogue is buffer donation + XLA's arena allocator; what remains on the
-*host* is the aggregation staging slab: the contiguous pinned buffer into
-which aggregated tasks write their inputs (each task owning chunk ``i``).
-Reallocating that slab per launch costs an alloc + page-fault storm per
-aggregated kernel; this pool recycles slabs keyed by (shape, dtype), exactly
-like CPPuddle's ``buffer_recycler``.
+analogue is buffer donation + XLA's arena allocator.  Two staging layers
+live here (DESIGN.md §3):
+
+* ``SlotRing`` — the device-resident analogue of CPPuddle's pre-allocated
+  aggregation buffer: one persistent ``(capacity, *task_shape)`` device
+  array per kernel argument, double-buffered.  Each submitted task writes
+  its inputs into slot ``i`` via a *donated* ``lax.dynamic_update_slice``,
+  so XLA updates the ring in place; a launch then consumes a zero-copy
+  prefix view of the filled slots.  No host round-trip ever happens on the
+  hot path.
+* ``BufferPool`` — the legacy *host* slab recycler, kept for the
+  ``staging="host"`` comparison mode (the seed implementation) and for
+  genuinely host-resident inputs.  Reallocating a slab per launch costs an
+  alloc + page-fault storm per aggregated kernel; the pool recycles slabs
+  keyed by (shape, dtype), exactly like CPPuddle's ``buffer_recycler``.
 """
 from __future__ import annotations
 
 import threading
 from collections import defaultdict
-from typing import Dict, List, Sequence, Tuple
+from functools import partial
+from typing import Any, Dict, List, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -54,3 +66,91 @@ class BufferPool:
 
 # process-wide default pool, mirroring CPPuddle's global recycler
 DEFAULT_POOL = BufferPool()
+
+
+# ---------------------------------------------------------------------------
+# Device-resident slot ring
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_slot(ring, value, slot):
+    """In-place slot write: ring[slot] = value (ring buffer donated)."""
+    return jax.lax.dynamic_update_slice(
+        ring, value[None], (slot,) + (0,) * value.ndim)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _compact(ring, start):
+    """Move the live suffix [start:] to the front (slot renumbering)."""
+    return jnp.roll(ring, -start, axis=0)
+
+
+class SlotRing:
+    """Double-buffered device staging ring for aggregated task inputs.
+
+    One ring per kernel argument, each shaped ``(capacity, *task_shape)``.
+    Tasks claim consecutive slots; a bucketed launch reads the prefix
+    ``[first_queued, first_queued + k)`` directly from the ring (zero host
+    staging).  After a launch drains the queue the *other* buffer becomes
+    active, so new writes never chain a data dependency onto a ring an
+    in-flight kernel is still reading (classic double buffering).
+
+    When the active buffer fills while a remainder is still queued (possible
+    under watermark-triggered partial launches), ``compact`` rolls the live
+    suffix to the front — a single fused device op, no host copies.
+    """
+
+    def __init__(self, capacity: int, example_args: Sequence[Any],
+                 n_buffers: int = 2):
+        assert capacity >= 1 and n_buffers >= 1
+        self.capacity = capacity
+        self._specs = [(tuple(np.shape(a)), jnp.asarray(a).dtype)
+                       for a in example_args]
+        self._bufs = [
+            [jnp.zeros((capacity,) + shape, dtype)
+             for shape, dtype in self._specs]
+            for _ in range(n_buffers)]
+        self._active = 0
+        self.fill = 0                 # next free slot in the active buffer
+        self.writes = 0               # statistics
+        self.compactions = 0
+        self.swaps = 0
+
+    @property
+    def n_args(self) -> int:
+        return len(self._specs)
+
+    def buffers(self) -> Tuple[jax.Array, ...]:
+        """The active ring buffers (one per kernel argument)."""
+        return tuple(self._bufs[self._active])
+
+    def write(self, args: Sequence[Any]) -> int:
+        """Write one task's inputs into the next free slot; returns the slot.
+
+        The caller must ``compact``/reset before writing to a full ring.
+        """
+        assert self.fill < self.capacity, "ring full — compact first"
+        slot = self.fill
+        active = self._bufs[self._active]
+        s = jnp.int32(slot)
+        for j, a in enumerate(args):
+            active[j] = _write_slot(active[j], jnp.asarray(a), s)
+        self.fill += 1
+        self.writes += 1
+        return slot
+
+    def compact(self, start: int) -> None:
+        """Renumber live slots [start:fill) down to [0, fill-start)."""
+        active = self._bufs[self._active]
+        s = jnp.int32(start)
+        for j in range(len(active)):
+            active[j] = _compact(active[j], s)
+        self.fill -= start
+        self.compactions += 1
+
+    def swap(self) -> None:
+        """Switch to the other buffer and reset the fill cursor (called when
+        the queue drains, so the just-launched ring stays untouched)."""
+        self._active = (self._active + 1) % len(self._bufs)
+        self.fill = 0
+        self.swaps += 1

@@ -20,6 +20,7 @@ insufficient on MI100, which we reproduce on this third runtime.
 from __future__ import annotations
 
 import itertools
+import time
 from typing import Any, Callable, List, Optional, Sequence
 
 import jax
@@ -41,10 +42,13 @@ class DeviceExecutor:
         self._inflight: List[Any] = []
         self._max_tracked = max_inflight_tracked
         self.launches = 0           # statistics
+        self.dispatch_s = 0.0       # host time spent enqueueing launches
 
     def launch(self, fn: Callable, *args) -> Any:
         """Enqueue fn(*args) (async under XLA) and track its outputs."""
+        t0 = time.perf_counter()
         out = fn(*args)
+        self.dispatch_s += time.perf_counter() - t0
         self.launches += 1
         leaves = jax.tree_util.tree_leaves(out)
         if leaves:
@@ -93,3 +97,9 @@ class ExecutorPool:
     @property
     def total_launches(self) -> int:
         return sum(e.launches for e in self.executors)
+
+    @property
+    def total_dispatch_s(self) -> float:
+        """Aggregate host dispatch wall time (the launch-overhead metric
+        reported by benchmarks/launch_overhead.py)."""
+        return sum(e.dispatch_s for e in self.executors)

@@ -9,13 +9,21 @@ per-sub-grid Reconstruct+Flux task is launched according to a strategy:
 * ``s2``   — implicit aggregation: one launch per task, round-robin over a
              pre-allocated executor pool; the runtime is left to overlap them
              (paper finding: works iff the runtime can — reproduced here).
+             Each launch scatters its result into a donated output slot ring
+             (``lax.dynamic_update_slice`` on an in-place buffer), so the
+             iteration performs ZERO host-side slicing or concatenation.
 * ``s3``   — explicit aggregation: tasks are fused on-the-fly into bucketed
-             batched kernels by the AggregationExecutor.
+             batched kernels by the AggregationExecutor.  Inputs are staged
+             by slot index (``submit_indexed``): one gather per launch over
+             the already-device-resident sub-grid array, per DESIGN.md §3.
 * ``s2+s3``— s3 with multiple underlying executors (the paper's best rows).
 * ``fused``— beyond-paper upper bound: the whole iteration as ONE XLA
              program (what a static whole-graph compiler can do when the
              task structure is known ahead of time; the paper's dynamic AMR
              setting is precisely where this is NOT generally available).
+             ``rk3_trajectory`` extends this to whole multi-step RK3
+             trajectories dispatched as ONE ``lax.scan`` program with the
+             state buffer donated (the Table III upper-bound row).
 
 All strategies are bit-identical in results (tested); only launch structure
 differs.
@@ -24,13 +32,13 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AggregationConfig, HydroConfig
-from repro.core.aggregation import AggregationExecutor
+from repro.core.aggregation import AggregationExecutor, gather_futures
 from repro.core.executor import ExecutorPool
 from repro.hydro.state import assemble_global, extract_subgrids
 from repro.hydro.stepper import subgrid_rhs
@@ -58,12 +66,26 @@ class HydroStrategyRunner:
 
         self._jit_body = jax.jit(self.body)
         self._jit_batched = jax.jit(self.batched_body)
+        # s2: one compiled program reused for every task — slice task i out
+        # of the resident sub-grid array and scatter the result into its
+        # output-ring slot, both inside the program (no subs[i:i+1] host
+        # slicing, no per-iteration jnp.concatenate).  The ring is donated,
+        # so XLA reuses one output buffer across all n launches.
+        self._s2_scatter = jax.jit(self._s2_scatter_impl, donate_argnums=(0,))
+        self._traj_cache: Dict[int, Callable] = {}
         self.pool = ExecutorPool(max(1, agg.n_executors))
         self._agg_exec: Optional[AggregationExecutor] = None
         if self.strategy in ("s3", "s2+s3"):
             self._agg_exec = AggregationExecutor(
                 self.batched_body, agg, pool=self.pool, name="hydro_rhs")
-        self.stats: Dict[str, int] = {"kernel_launches": 0, "iterations": 0}
+        self.stats: Dict[str, float] = {"kernel_launches": 0, "iterations": 0,
+                                        "staging_s": 0.0}
+
+    def _s2_scatter_impl(self, out_ring, subs, i):
+        task = jax.lax.dynamic_slice_in_dim(subs, i, 1, axis=0)
+        return jax.lax.dynamic_update_slice(
+            out_ring, self.batched_body(task),
+            (i,) + (0,) * (out_ring.ndim - 1))
 
     # -- one hydro iteration: ghost exchange + all sub-grid tasks ---------
     def rhs(self, u: jax.Array) -> jax.Array:
@@ -79,17 +101,31 @@ class HydroStrategyRunner:
             # Uses the batched body at bucket size 1 so every strategy runs
             # the SAME compiled program (bit-identical results by
             # construction, matching the paper's shared-kernel design).
-            results = [None] * n
+            # Results assemble via a single donated slot ring — each launch
+            # writes its slot in place; no host-side stitching remains.
+            # Tradeoff: the donated carry chains launches at the device
+            # level, which costs nothing on XLA:CPU/TPU (one program at a
+            # time per core — only host dispatch pipelining matters, and
+            # enqueues still return immediately) but would forfeit
+            # inter-stream concurrency on a CUDA-like backend; see
+            # DESIGN.md §3.
+            s = self.cfg.subgrid
+            out = jnp.zeros((n, self.cfg.n_fields, s, s, s), subs.dtype)
             for i in range(n):
                 exe = self.pool.get()
-                results[i] = exe.launch(self._jit_batched, subs[i:i + 1])
+                out = exe.launch(self._s2_scatter, out, subs, jnp.int32(i))
             self.stats["kernel_launches"] += n
-            out = jnp.concatenate(results)
         elif self.strategy in ("s3", "s2+s3"):
             exe = self._agg_exec
-            futs = [exe.submit(subs[i]) for i in range(n)]
+            if self.agg.staging == "host":
+                # the seed's path, kept measurable: slice each task apart on
+                # the host queue, re-stack per launch
+                futs = [exe.submit(subs[i]) for i in range(n)]
+            else:
+                futs = [exe.submit_indexed((subs,), i) for i in range(n)]
             exe.flush()
-            out = jnp.stack([f.result() for f in futs])
+            out = gather_futures(futs)
+            self.stats["staging_s"] = exe.stats["staging_s"]
             self.stats["kernel_launches"] = exe.stats["launches"]
         else:
             raise ValueError(f"unknown strategy {self.strategy!r}")
@@ -104,12 +140,54 @@ class HydroStrategyRunner:
         l2 = self.rhs(u2)
         return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
 
-    def time_step(self, u: jax.Array, dt, n_steps: int = 1) -> float:
+    # -- whole-trajectory scan driver (fused upper bound) -----------------
+    def _trajectory_impl(self, n_steps: int, u, dt):
+        def one_rhs(v):
+            subs = extract_subgrids(v, self.cfg.subgrid, self.cfg.ghost,
+                                    self.bc)
+            return assemble_global(self.batched_body(subs), self.cfg.subgrid)
+
+        def body(v, _):
+            l0 = one_rhs(v)
+            u1 = v + dt * l0
+            l1 = one_rhs(u1)
+            u2 = 0.75 * v + 0.25 * (u1 + dt * l1)
+            l2 = one_rhs(u2)
+            return (1.0 / 3.0) * v + (2.0 / 3.0) * (u2 + dt * l2), None
+
+        out, _ = jax.lax.scan(body, u, None, length=n_steps)
+        return out
+
+    def rk3_trajectory(self, u: jax.Array, dt, n_steps: int) -> jax.Array:
+        """Run ``n_steps`` RK3 steps.  Under ``fused`` the whole trajectory
+        is ONE donated ``lax.scan`` program (single dispatch, state updated
+        in place); other strategies fall back to the per-step loop."""
+        if self.strategy != "fused":
+            for _ in range(n_steps):
+                u = self.rk3_step(u, dt)
+            return u
+        fn = self._traj_cache.get(n_steps)
+        if fn is None:
+            fn = jax.jit(partial(self._trajectory_impl, n_steps),
+                         donate_argnums=(0,))
+            self._traj_cache[n_steps] = fn
+        # donate a private copy so the caller's state array stays valid;
+        # inside the program the scan carry aliases the donated buffer
+        out = fn(jnp.array(u, copy=True), dt)
+        self.stats["kernel_launches"] += 1
+        self.stats["iterations"] += 3 * n_steps
+        return out
+
+    def time_step(self, u: jax.Array, dt, n_steps: int = 1,
+                  use_scan: bool = False) -> float:
         """Average wall seconds per time-step (the Table III metric)."""
         out = u
         jax.block_until_ready(out)
         t0 = time.perf_counter()
-        for _ in range(n_steps):
-            out = self.rk3_step(out, dt)
+        if use_scan and self.strategy == "fused":
+            out = self.rk3_trajectory(out, dt, n_steps)
+        else:
+            for _ in range(n_steps):
+                out = self.rk3_step(out, dt)
         jax.block_until_ready(out)
         return (time.perf_counter() - t0) / n_steps

@@ -42,9 +42,7 @@ def _rhs_global(u, cfg: HydroConfig, h: float, bc: str):
     return assemble_global(dudt, cfg.subgrid)
 
 
-@partial(jax.jit, static_argnames=("cfg", "bc"))
-def rk3_step(u, dt, cfg: HydroConfig, bc: str = "outflow"):
-    """Shu-Osher TVD-RK3: three iterations of the hydro solver."""
+def _rk3_body(u, dt, cfg: HydroConfig, bc: str):
     h = cfg.domain / u.shape[-1]
     l0 = _rhs_global(u, cfg, h, bc)
     u1 = u + dt * l0
@@ -52,6 +50,32 @@ def rk3_step(u, dt, cfg: HydroConfig, bc: str = "outflow"):
     u2 = 0.75 * u + 0.25 * (u1 + dt * l1)
     l2 = _rhs_global(u2, cfg, h, bc)
     return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
+
+
+@partial(jax.jit, static_argnames=("cfg", "bc"))
+def rk3_step(u, dt, cfg: HydroConfig, bc: str = "outflow"):
+    """Shu-Osher TVD-RK3: three iterations of the hydro solver."""
+    return _rk3_body(u, dt, cfg, bc)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_steps", "bc"),
+         donate_argnums=(0,))
+def rk3_trajectory(u, dt, cfg: HydroConfig, n_steps: int,
+                   bc: str = "outflow"):
+    """``n_steps`` RK3 steps as ONE ``lax.scan`` program (fixed dt).
+
+    The whole trajectory dispatches once; the state buffer is donated so
+    XLA aliases the scan carry in place.  NOTE: donation invalidates the
+    caller's ``u`` — pass a copy if the input must survive.  This is the
+    fused-strategy upper bound extended over time (Table III's last row);
+    ``run`` keeps the per-step loop because it recomputes the Courant dt
+    between steps.
+    """
+    def body(v, _):
+        return _rk3_body(v, dt, cfg, bc), None
+
+    out, _ = jax.lax.scan(body, u, None, length=n_steps)
+    return out
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -187,6 +187,39 @@ def hydro_rhs_pallas(u_slots: jax.Array, *, h: float, gamma: float,
     raise ValueError(f"unknown layout {layout!r}")
 
 
+# -- slot-ring integration --------------------------------------------------
+
+def hydro_rhs_pallas_prefix(ring: jax.Array, start, bucket: int, *,
+                            h: float, gamma: float, ghost: int, subgrid: int,
+                            layout: str = "slot_grid",
+                            interpret: bool = True) -> jax.Array:
+    """Run the aggregated kernel on a slot-ring prefix, staging-free.
+
+    ``ring`` is the AggregationExecutor's device-resident staging ring
+    ``(capacity, F, P, P, P)``; the filled prefix ``[start, start+bucket)``
+    is sliced *inside* the program (one fused op, no host copies) and fed to
+    the Pallas kernel.  ``bucket`` is static — one compiled program per
+    bucket size, matching the executor's bucket ladder.
+    """
+    u = jax.lax.dynamic_slice_in_dim(ring, start, bucket, axis=0)
+    return hydro_rhs_pallas(u, h=h, gamma=gamma, ghost=ghost,
+                            subgrid=subgrid, layout=layout,
+                            interpret=interpret)
+
+
+def pallas_batched_body(cfg, h: float, layout: str = "slot_grid",
+                        interpret: bool = True):
+    """Factory: a batched task body backed by the Pallas kernel, drop-in for
+    ``HydroStrategyRunner(batched_body=...)`` / ``AggregationExecutor`` —
+    the path that runs the paper's GPU kernels through the slot-ring
+    aggregation pipeline instead of the XLA oracle."""
+    def batched(u_slots):
+        return hydro_rhs_pallas(u_slots, h=h, gamma=cfg.gamma,
+                                ghost=cfg.ghost, subgrid=cfg.subgrid,
+                                layout=layout, interpret=interpret)
+    return batched
+
+
 # -- split kernels (paper-faithful two-kernel structure) --------------------
 
 def _kernel_reconstruct(u_ref, out_ref, *, axes=(-3, -2, -1)):

@@ -1,0 +1,348 @@
+"""Slot-ring staging: device-residency, equivalence, and launch accounting.
+
+The PR's invariants (DESIGN.md §3):
+* the slot-ring / indexed-gather S3 path is BIT-identical to ``fused`` and
+  to the seed's host-staging path (not just allclose);
+* launches follow the greedy bucket decomposition exactly;
+* ``gather_futures`` is zero-copy when futures cover whole launches;
+* ring compaction under watermark remainders preserves results;
+* the ``lax.scan`` trajectory driver matches the per-step loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AggregationConfig, HydroConfig
+from repro.core import (
+    AggregationExecutor, HydroStrategyRunner, SlotRing, SlotView,
+    gather_futures,
+)
+from repro.hydro.state import extract_subgrids, sedov_init
+from repro.hydro.stepper import courant_dt, rk3_step, rk3_trajectory
+
+CFG = HydroConfig(subgrid=8, ghost=3, levels=1)
+
+
+def _batched_affine(x):
+    return 2.0 * x + 1.0
+
+
+def _vm():
+    return jax.vmap(_batched_affine)
+
+
+# ---------------------------------------------------------------------------
+# SlotRing unit semantics
+# ---------------------------------------------------------------------------
+
+def test_slot_ring_write_and_buffers():
+    ring = SlotRing(4, (jnp.zeros((3,)),))
+    for i in range(3):
+        assert ring.write((jnp.full((3,), float(i)),)) == i
+    buf = ring.buffers()[0]
+    assert buf.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(buf[:3]),
+                                  np.stack([np.full(3, float(i))
+                                            for i in range(3)]))
+    assert ring.fill == 3 and ring.writes == 3
+
+
+def test_slot_ring_swap_is_double_buffered():
+    ring = SlotRing(2, (jnp.zeros((2,)),))
+    ring.write((jnp.ones((2,)),))
+    a = ring.buffers()[0]
+    ring.swap()
+    assert ring.fill == 0
+    assert ring.buffers()[0] is not a     # other buffer now active
+    ring.swap()
+    assert ring.buffers()[0] is a         # back to the first
+
+
+def test_slot_ring_compact_renumbers():
+    ring = SlotRing(4, (jnp.zeros((2,)),))
+    for i in range(4):
+        ring.write((jnp.full((2,), float(i)),))
+    ring.compact(2)                       # slots 2,3 -> 0,1
+    assert ring.fill == 2 and ring.compactions == 1
+    np.testing.assert_array_equal(np.asarray(ring.buffers()[0][:2]),
+                                  [[2.0, 2.0], [3.0, 3.0]])
+
+
+def test_executor_ring_compaction_under_watermark_remainders():
+    """Partial watermark launches leave a mid-ring remainder; when the ring
+    fills, the live tail must slide to the front without corrupting queued
+    tasks (exercises SlotRing.compact through the executor)."""
+    cfg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=4,
+                            buckets=(1, 2), launch_watermark=3)
+    exe = AggregationExecutor(_vm(), cfg)
+    xs = [jnp.full((2,), float(i)) for i in range(9)]
+    futs = [exe.submit(x) for x in xs]
+    exe.flush()
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full(2, 2.0 * i + 1.0))
+    assert exe.ring.compactions >= 1
+
+
+# ---------------------------------------------------------------------------
+# launch accounting: greedy bucket decomposition
+# ---------------------------------------------------------------------------
+
+def _greedy_launches(q: int, buckets) -> int:
+    n = 0
+    while q:
+        b = max(x for x in buckets if x <= q)
+        q -= b
+        n += 1
+    return n
+
+
+@pytest.mark.parametrize("n_tasks", [1, 3, 7, 12, 29, 64])
+def test_launches_match_greedy_bucket_prediction(n_tasks):
+    cfg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    for i in range(n_tasks):
+        exe.submit(jnp.full((2,), float(i)))
+    exe.flush()
+    assert exe.stats["launches"] == _greedy_launches(
+        n_tasks, cfg.bucket_sizes())
+    assert sum(k * v for k, v in exe.stats["aggregated_hist"].items()) \
+        == n_tasks
+
+
+def test_warmup_precompiles_aot():
+    """warmup AOT-lowers one executable per bucket (.lower().compile()),
+    instead of the seed's per-bucket identical jit wrappers."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    exe.warmup((jnp.zeros((3,)),))
+    for b in cfg.bucket_sizes():
+        fn = exe._compiled[("ring", b)]
+        assert isinstance(fn, jax.stages.Compiled)
+    outs = exe.map([(jnp.full((3,), float(i)),) for i in range(8)])
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o), np.full(3, 2.0 * i + 1.0))
+
+
+def test_warmup_precompiles_aot_host_mode():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=10**9, staging="host")
+    exe = AggregationExecutor(_vm(), cfg)
+    exe.warmup((jnp.zeros((3,)),))
+    for b in cfg.bucket_sizes():
+        assert isinstance(exe._compiled[("host", b)], jax.stages.Compiled)
+    outs = exe.map([(jnp.full((3,), float(i)),) for i in range(5)])
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o), np.full(3, 2.0 * i + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# gather_futures
+# ---------------------------------------------------------------------------
+
+def test_gather_futures_whole_launch_is_zero_copy():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    futs = [exe.submit(jnp.full((2,), float(i))) for i in range(8)]
+    exe.flush()
+    assert exe.stats["launches"] == 1
+    out = gather_futures(futs)
+    assert out is futs[0]._batch          # the batch itself, no copy
+    np.testing.assert_array_equal(
+        np.asarray(out), np.stack([np.full(2, 2.0 * i + 1.0)
+                                   for i in range(8)]))
+
+
+def test_gather_futures_across_launches():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    futs = [exe.submit(jnp.full((2,), float(i))) for i in range(7)]
+    exe.flush()
+    assert exe.stats["launches"] > 1
+    out = gather_futures(futs)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.stack([np.full(2, 2.0 * i + 1.0)
+                                   for i in range(7)]))
+
+
+def test_gather_futures_unlaunched_raises():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    futs = [exe.submit(jnp.ones((2,)))]
+    with pytest.raises(RuntimeError):
+        gather_futures(futs)
+    exe.flush()
+
+
+# ---------------------------------------------------------------------------
+# indexed-gather (SlotView) staging
+# ---------------------------------------------------------------------------
+
+def test_submit_indexed_matches_concrete_submit():
+    parent = jnp.arange(24.0).reshape(6, 4)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=6,
+                            launch_watermark=10**9)
+    ref_exe = AggregationExecutor(_vm(), cfg)
+    ref = ref_exe.map([(parent[i],) for i in range(6)])
+    exe = AggregationExecutor(_vm(), cfg)
+    futs = [exe.submit_indexed((parent,), i) for i in range(6)]
+    exe.flush()
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.asarray(ref[i]))
+
+
+def test_distinct_parents_never_share_a_bucket():
+    """Tasks referencing different parent arrays must not be gathered from
+    one parent set — the executor launches the queued run first."""
+    p1 = jnp.arange(8.0).reshape(2, 4)
+    p2 = 100.0 + jnp.arange(8.0).reshape(2, 4)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    f1 = exe.submit_indexed((p1,), 0)
+    f2 = exe.submit_indexed((p2,), 1)
+    exe.flush()
+    assert exe.stats["launches"] == 2     # not merged into one gather
+    np.testing.assert_array_equal(np.asarray(f1.result()),
+                                  np.asarray(2.0 * p1[0] + 1.0))
+    np.testing.assert_array_equal(np.asarray(f2.result()),
+                                  np.asarray(2.0 * p2[1] + 1.0))
+
+
+def test_slotview_args_must_share_index():
+    p = jnp.arange(8.0).reshape(2, 4)
+    q = jnp.arange(8.0).reshape(2, 4)
+    exe = AggregationExecutor(jax.vmap(lambda a, b: a + b),
+                              AggregationConfig(strategy="s3"))
+    with pytest.raises(ValueError):
+        exe.submit(SlotView(p, 0), SlotView(q, 1))
+
+
+def test_mode_switch_flushes_pending():
+    """Ring-mode and ref-mode entries never share a bucket; a mode switch
+    launches what is queued first."""
+    parent = jnp.arange(12.0).reshape(3, 4)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(_vm(), cfg)
+    f_ring = exe.submit(jnp.full((4,), 7.0))
+    f_ref = exe.submit(SlotView(parent, 1))
+    assert f_ring.ready()                 # flushed by the mode switch
+    exe.flush()
+    np.testing.assert_array_equal(np.asarray(f_ring.result()),
+                                  np.full(4, 15.0))
+    np.testing.assert_array_equal(np.asarray(f_ref.result()),
+                                  np.asarray(2.0 * parent[1] + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# hydro: the PR's acceptance invariant — BIT-identical across staging paths
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sedov():
+    st = sedov_init(CFG)
+    dt = courant_dt(st.u, CFG)
+    ref = HydroStrategyRunner(CFG, AggregationConfig(
+        strategy="fused")).rk3_step(st.u, dt)
+    return st, dt, ref
+
+
+def test_s3_ring_bit_identical_to_fused_and_host(sedov):
+    """One bucket covering all tasks: the gather-staged program computes the
+    exact same XLA reduction order as fused and as the seed's host staging —
+    results must be bit-identical, not merely allclose."""
+    st, dt, ref = sedov
+    n = CFG.n_subgrids
+    dev = HydroStrategyRunner(CFG, AggregationConfig(
+        strategy="s3", max_aggregated=n, launch_watermark=10**9))
+    host = HydroStrategyRunner(CFG, AggregationConfig(
+        strategy="s3", max_aggregated=n, launch_watermark=10**9,
+        staging="host"))
+    out_dev = dev.rk3_step(st.u, dt)
+    out_host = host.rk3_step(st.u, dt)
+    np.testing.assert_array_equal(np.asarray(out_dev), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(out_dev), np.asarray(out_host))
+
+
+def test_s2_scatter_ring_bit_identical_to_fused(sedov):
+    st, dt, ref = sedov
+    s2 = HydroStrategyRunner(CFG, AggregationConfig(strategy="s2",
+                                                    n_executors=2))
+    out = s2.rk3_step(st.u, dt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert s2.stats["kernel_launches"] == 3 * CFG.n_subgrids
+
+
+def test_s3_launch_counts_greedy_on_hydro(sedov):
+    st, dt, _ = sedov
+    n = CFG.n_subgrids
+    for max_agg in (3, n, 2 * n):
+        agg = AggregationConfig(strategy="s3", max_aggregated=max_agg,
+                                launch_watermark=10**9)
+        r = HydroStrategyRunner(CFG, agg)
+        r.rhs(st.u)
+        assert r._agg_exec.stats["launches"] == _greedy_launches(
+            n, agg.bucket_sizes())
+
+
+def test_trajectory_scan_matches_step_loop(sedov):
+    st, dt, _ = sedov
+    r = HydroStrategyRunner(CFG, AggregationConfig(strategy="fused"))
+    loop = st.u
+    for _ in range(2):
+        loop = r.rk3_step(loop, dt)
+    before = r.stats["kernel_launches"]
+    scan = r.rk3_trajectory(st.u, dt, 2)
+    assert r.stats["kernel_launches"] == before + 1   # ONE dispatch
+    scale = float(np.max(np.abs(np.asarray(loop))))
+    np.testing.assert_allclose(np.asarray(scan), np.asarray(loop),
+                               atol=1e-5 * scale, rtol=1e-5)
+    # the caller's state array must survive (the driver donates a copy)
+    assert st.u.shape == (CFG.n_fields,) + (CFG.grids_per_edge * CFG.subgrid,) * 3
+
+
+def test_global_trajectory_matches_step_loop(sedov):
+    st, dt, _ = sedov
+    loop = st.u
+    for _ in range(2):
+        loop = rk3_step(loop, dt, CFG)
+    scan = rk3_trajectory(jnp.array(st.u, copy=True), dt, CFG, 2)
+    scale = float(np.max(np.abs(np.asarray(loop))))
+    np.testing.assert_allclose(np.asarray(scan), np.asarray(loop),
+                               atol=1e-5 * scale, rtol=1e-5)
+
+
+def test_staging_stats_accounted(sedov):
+    st, dt, _ = sedov
+    r = HydroStrategyRunner(CFG, AggregationConfig(
+        strategy="s3", max_aggregated=CFG.n_subgrids,
+        launch_watermark=10**9))
+    r.rhs(st.u)
+    assert r.stats["staging_s"] >= 0.0
+    assert r.pool.total_dispatch_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel through the ring (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_pallas_prefix_matches_direct_kernel():
+    from repro.kernels.hydro_rhs import (
+        hydro_rhs_pallas, hydro_rhs_pallas_prefix,
+    )
+    st = sedov_init(CFG)
+    subs = extract_subgrids(st.u, CFG.subgrid, CFG.ghost, "outflow")
+    h = CFG.domain / (CFG.grids_per_edge * CFG.subgrid)
+    kw = dict(h=h, gamma=CFG.gamma, ghost=CFG.ghost, subgrid=CFG.subgrid)
+    want = hydro_rhs_pallas(subs[2:6], **kw)
+    got = jax.jit(lambda r, s: hydro_rhs_pallas_prefix(r, s, 4, **kw))(
+        subs, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
