@@ -228,13 +228,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-exact 512 sub-grids (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier-1 smoke: smallest grid, 1 step, 1 repeat "
+                         "(counters are exact; wall times indicative only)")
     ap.add_argument("--steps", type=int, default=3)
     ap.add_argument("--repeats", type=int, default=3,
                     help="best-of-N timing (filters scheduler noise)")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps, args.repeats = 1, 1
     if args.steps < 1 or args.repeats < 1:
         ap.error("--steps and --repeats must be >= 1")
-    levels = 3 if args.full else 2
+    levels = 1 if args.smoke else 3 if args.full else 2
     print(f"launch_overhead: Sedov, {8 ** 3 * (2 ** levels) ** 3} cells, "
           f"backend={jax.default_backend()}")
     rows = run(levels=levels, steps=args.steps, repeats=args.repeats)

@@ -73,10 +73,11 @@ def sweep(levels: int = 2, steps: int = 2, quick: bool = False):
             "max_aggregated": max_agg,
             "staging": agg.staging,
             "ms_per_step": round(sec * 1e3, 2),
-            # fractional for the scan row: ONE dispatch covers all steps
+            # fractional for the scan row: ONE dispatch covers all steps.
+            # Every strategy (s3 included) now accumulates per-call deltas,
+            # so the per-step division is uniform.
             "launches_per_step": round(
-                runner.stats["kernel_launches"] / max(steps, 1), 3)
-            if strat != "s3" else runner.stats["kernel_launches"],
+                runner.stats["kernel_launches"] / max(steps, 1), 3),
         })
         print(f"  {tag:22s} {rows[-1]['ms_per_step']:9.2f} ms/step")
     return rows

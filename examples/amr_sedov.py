@@ -1,0 +1,66 @@
+"""Two-level AMR Sedov quickstart: the multi-region aggregation runtime.
+
+A coarse grid covers the whole domain; a centred fine patch refines the
+blast at 2x resolution.  Every RK3 iteration produces a MIXED task list —
+coarse and fine sub-grids, with per-level cell width ``h`` as a traced task
+argument — driven through one AggregationExecutor.  With ``--mixed`` the
+levels use different sub-grid sizes, so TWO TaskSignature families
+aggregate concurrently (distinct rings/buckets, interleaved launches).
+
+Every strategy's result is checked bit-identical to the per-level fused
+reference, the equivalence invariant of the aggregation substrate.
+
+  PYTHONPATH=src python examples/amr_sedov.py [--mixed] [--steps N]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
+from repro.configs.base import AggregationConfig
+from repro.core import AMRStrategyRunner
+from repro.hydro.state import amr_sedov_init
+from repro.hydro.stepper import amr_courant_dt, amr_reference_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mixed", action="store_true",
+                    help="different per-level sub-grid sizes (two families)")
+    ap.add_argument("--steps", type=int, default=1)
+    args = ap.parse_args()
+    cfg = CONFIG_MIXED if args.mixed else CONFIG
+    print(f"{cfg.name}: coarse {cfg.n_coarse}^3 (h={cfg.h_coarse:.4f}) + "
+          f"fine {cfg.n_fine}^3 patch (h={cfg.h_fine:.4f}), "
+          f"{cfg.n_subgrids_coarse}+{cfg.n_subgrids_fine} tasks/iteration")
+
+    st = amr_sedov_init(cfg)
+    dt = amr_courant_dt(st.uc, st.uf, cfg)
+    ref_c, ref_f = st.uc, st.uf
+    for _ in range(args.steps):
+        ref_c, ref_f = amr_reference_step(ref_c, ref_f, dt, cfg)
+
+    for strat, n_exec, max_agg in [("fused", 1, 1), ("s2", 2, 1),
+                                   ("s3", 1, 16), ("s2+s3", 4, 16)]:
+        agg = AggregationConfig(strategy=strat, n_executors=n_exec,
+                                max_aggregated=max_agg,
+                                launch_watermark=10 ** 9)
+        r = AMRStrategyRunner(cfg, agg)
+        uc, uf = st.uc, st.uf
+        for _ in range(args.steps):
+            uc, uf = r.rk3_step(uc, uf, dt)
+        ok = (np.array_equal(np.asarray(uc), np.asarray(ref_c))
+              and np.array_equal(np.asarray(uf), np.asarray(ref_f)))
+        fams = ""
+        if r._agg_exec is not None:
+            hists = {k: v["aggregated_hist"]
+                     for k, v in r._agg_exec.stats["regions"].items()}
+            fams = f"  families={hists}"
+        print(f"  {strat:6s} launches={r.stats['kernel_launches']:4d}  "
+              f"bit-identical={ok}{fams}")
+        assert ok, f"strategy {strat} diverged from the per-level reference"
+    print("all strategies bit-identical to the per-level fused reference")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Two-level refined Sedov blast (the genuinely adaptive workload).
+
+Two instances:
+
+* ``CONFIG``       — both levels use 8^3 sub-grids.  Per-task shapes agree,
+  so coarse and fine tasks share ONE ``TaskSignature`` family: the same
+  compiled bucket programs serve both levels (per-level cell width ``h`` is
+  a traced task argument, not a compile-time constant).
+* ``CONFIG_MIXED`` — the coarse level is a single 16^3 sub-grid while the
+  fine level stays 8^3: two distinct ``TaskSignature`` families aggregate
+  concurrently through one executor (distinct rings, buckets and compile
+  caches — the multi-region runtime's raison d'etre).
+
+Both refine the central half of the domain at 2x resolution, which fully
+contains the Sedov blast sphere.
+"""
+from repro.configs.base import AMRHydroConfig
+
+CONFIG = AMRHydroConfig()
+
+CONFIG_MIXED = AMRHydroConfig(name="amr_sedov_mixed", coarse_subgrid=16,
+                              coarse_grids_per_edge=1)

@@ -2,20 +2,24 @@
 
 * ``executor``    — device executors + pre-allocated pool (streams analogue)
 * ``buffers``     — recycled staging slabs (CPPuddle allocator analogue)
-* ``aggregation`` — the on-the-fly explicit work-aggregation executor (S3)
-* ``strategies``  — S1/S2/S3/fused strategy runners over the hydro tasks
+* ``aggregation`` — the on-the-fly explicit work-aggregation executor (S3),
+                    a multi-region runtime keyed by ``TaskSignature``
+* ``strategies``  — S1/S2/S3/fused strategy runners over the hydro tasks,
+                    uniform-grid and two-level AMR
 """
 from repro.core.aggregation import (
-    AggregationExecutor, SlotView, TaskFuture, aggregation_region,
-    gather_futures, reset_regions,
+    AggregationExecutor, SlotView, TaskFuture, TaskSignature,
+    aggregation_region, gather_futures, reset_regions,
 )
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
-from repro.core.strategies import HydroStrategyRunner, xla_task_body
+from repro.core.strategies import (
+    AMRStrategyRunner, HydroStrategyRunner, xla_task_body,
+)
 
 __all__ = [
-    "AggregationExecutor", "SlotView", "TaskFuture", "aggregation_region",
-    "gather_futures", "reset_regions",
+    "AggregationExecutor", "SlotView", "TaskFuture", "TaskSignature",
+    "aggregation_region", "gather_futures", "reset_regions",
     "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
-    "HydroStrategyRunner", "xla_task_body",
+    "AMRStrategyRunner", "HydroStrategyRunner", "xla_task_body",
 ]

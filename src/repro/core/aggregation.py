@@ -6,6 +6,16 @@ becomes idle — or the ``max_aggregated`` cap is reached — the queued tasks
 are fused into ONE batched kernel launch over a slot axis.  Each task gets a
 future resolving to its slot of the batched output.
 
+Multi-region runtime (DESIGN.md §7): one executor hosts MANY aggregation
+regions at once.  Submissions are routed by :class:`TaskSignature` — kernel
+id plus per-argument shape/dtype — to their family's slot ring, queue and
+compiled-bucket cache, so heterogeneous task populations (the adaptive-
+refinement regime of the follow-up AMR work, arXiv:2412.15518) aggregate
+concurrently without serializing each other.  A region is created lazily the
+first time a signature is seen, which also makes a single registered kernel
+shape-polymorphic: new task shapes simply open new regions over the same
+body.
+
 TPU adaptation (DESIGN.md §2): XLA requires static shapes, so a dynamic
 aggregation count is realized as a small set of pre-compiled *buckets*
 (powers of two up to the cap).  A queue of length k is drained greedily with
@@ -17,7 +27,7 @@ Staging (DESIGN.md §3): the hot path is device-resident end to end.  Task
 inputs either
 
 * land in a pre-allocated :class:`~repro.core.buffers.SlotRing` via donated
-  ``lax.dynamic_update_slice`` writes (concrete per-task arrays), or
+  coalesced scatters (concrete per-task arrays), or
 * stay where they already live and are referenced by a :class:`SlotView`
   ``(parent, index)``; a launch then performs ONE ``jnp.take`` gather inside
   the bucketed program (index-batched staging, zero per-task slicing).
@@ -27,8 +37,9 @@ The seed's slice -> host-stack -> launch cycle survives as
 
 The paper's "Single-GPU-workload-Multiple-Tasks" constraint (all aggregated
 tasks execute the same allocation/launch sequence) is enforced *statically*
-here: the bucketed kernel is one traced function extended over the slot axis,
-so divergence between aggregated tasks is impossible by construction.
+here: each region's bucketed kernel is one traced function extended over the
+slot axis, so divergence between aggregated tasks is impossible by
+construction.
 """
 from __future__ import annotations
 
@@ -89,6 +100,10 @@ def gather_futures(futs: Sequence[TaskFuture]) -> Any:
     joined with one ``jnp.concatenate``.  This replaces the seed's
     per-future slice + re-stack (2n device ops for n tasks) with O(launches)
     ops.
+
+    Futures may interleave launches from different regions freely — runs
+    are grouped by launch identity — but all results must share one output
+    task-shape to concatenate; gather each family separately otherwise.
     """
     if not futs:
         raise ValueError("gather_futures needs at least one future")
@@ -116,6 +131,12 @@ def gather_futures(futs: Sequence[TaskFuture]) -> Any:
                 lambda x: jnp.take(x, idx, axis=0), batch))
     if len(parts) == 1:
         return parts[0]
+    task_shapes = {tuple(jax.tree_util.tree_leaves(p)[0].shape[1:])
+                   for p in parts}
+    if len(task_shapes) > 1:
+        raise ValueError(
+            f"futures span task families with different output shapes "
+            f"{sorted(task_shapes)} — gather each family separately")
     return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
@@ -134,6 +155,44 @@ class SlotView:
         self.index = index
 
 
+def _spec_of(a) -> Tuple[Tuple[int, ...], str]:
+    """(shape, dtype-str) of one task argument (SlotView -> per-slot spec)."""
+    if isinstance(a, SlotView):
+        p = a.parent
+        return tuple(p.shape[1:]), np.dtype(p.dtype).str
+    if hasattr(a, "shape") and hasattr(a, "dtype"):   # jax array / SDS
+        return tuple(a.shape), np.dtype(a.dtype).str
+    arr = np.asarray(a)
+    return arr.shape, np.dtype(jax.dtypes.canonicalize_dtype(arr.dtype)).str
+
+
+@dataclass(frozen=True)
+class TaskSignature:
+    """What makes two fine-grained tasks aggregable: the kernel family id
+    plus every argument's per-task shape and dtype.  The paper's SGMT
+    compatibility check, reified as the region-registry key."""
+
+    kernel: str
+    arg_specs: Tuple[Tuple[Tuple[int, ...], str], ...]
+
+    @classmethod
+    def from_args(cls, kernel: str, args: Sequence[Any]) -> "TaskSignature":
+        return cls(kernel, tuple(_spec_of(a) for a in args))
+
+    def describe(self) -> str:
+        """Unique human-readable key: shapes, with dtype appended whenever
+        it is not the default float32 (so same-shape families of different
+        dtypes never collide in ``stats["regions"]``)."""
+        f32 = np.dtype(np.float32).str
+
+        def one(spec):
+            shape, dt = spec
+            s = "x".join(map(str, shape)) or "scalar"
+            return s if dt == f32 else f"{s}:{dt.lstrip('<>|=')}"
+
+        return f"{self.kernel}[{','.join(one(s) for s in self.arg_specs)}]"
+
+
 @dataclass
 class _Pending:
     future: TaskFuture
@@ -142,15 +201,83 @@ class _Pending:
     args: Optional[Tuple[Any, ...]] = None        # host mode
 
 
+class _Region:
+    """One aggregation region: per-TaskSignature slot ring, submission queue
+    and compiled-bucket cache.  Regions share the owning executor's pool,
+    launch policy and config; everything shape- or body-specific lives here.
+    """
+
+    __slots__ = ("signature", "batched_fn", "ring", "queue", "compiled",
+                 "host_jit", "gather_jit", "stats")
+
+    def __init__(self, signature: TaskSignature, batched_fn: Callable,
+                 donate: bool):
+        self.signature = signature
+        self.batched_fn = batched_fn
+        self.ring: Optional[SlotRing] = None
+        self.queue: List[_Pending] = []
+        self.compiled: Dict[Tuple, Callable] = {}
+        # shared shape-polymorphic wrappers (jit re-specializes per shape,
+        # so ONE wrapper serves every bucket / parent shape)
+        self.host_jit = jax.jit(batched_fn,
+                                donate_argnums=(0,) if donate else ())
+        self.gather_jit = jax.jit(self._apply_gathered)
+        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {}}
+
+    # -- bucketed programs -------------------------------------------------
+    def _apply_gathered(self, idx, *parents):
+        """Index-batched staging: one gather feeds the aggregation body."""
+        return self.batched_fn(*(jnp.take(p, idx, axis=0) for p in parents))
+
+    def _apply_ring_prefix(self, bucket: int, start, *rings):
+        """Ring staging: the bucket reads a zero-copy view of the filled
+        prefix [start, start+bucket) straight out of the slot ring."""
+        sliced = tuple(jax.lax.dynamic_slice_in_dim(r, start, bucket, axis=0)
+                       for r in rings)
+        return self.batched_fn(*sliced)
+
+    # -- compilation cache -------------------------------------------------
+    # Each bucket size is a genuinely distinct XLA program (static shapes),
+    # cached under ("ring"|"host"|"prefix", bucket) — plus parent-shape-keyed
+    # AOT entries ("gather"|"prefix_aot", bucket, parent_shapes) installed by
+    # ``AggregationExecutor.warmup(parent_shapes=...)``.
+    def compiled_for(self, bucket: int, mode: str = "ring") -> Callable:
+        key = (mode, bucket)
+        fn = self.compiled.get(key)
+        if fn is None:
+            if mode in ("ring", "prefix"):
+                fn = jax.jit(partial(self._apply_ring_prefix, bucket))
+            else:
+                fn = self.host_jit
+            self.compiled[key] = fn
+        return fn
+
+    def ensure_ring(self, capacity: int,
+                    example_args: Sequence[Any]) -> SlotRing:
+        if self.ring is None:
+            self.ring = SlotRing(capacity, example_args)
+        return self.ring
+
+
 class AggregationExecutor:
-    """Aggregates submissions of one *kernel family* into bucketed launches.
+    """Aggregates submissions of *kernel families* into bucketed launches.
+
+    A registry of aggregation regions keyed by :class:`TaskSignature` lets
+    tasks of different kernels AND different shapes coexist: each family
+    gets its own slot ring, queue and compiled buckets, while the launch
+    policy, executor pool and statistics are shared.  ``flush`` drains the
+    live regions round-robin, so families interleave on the device instead
+    of serializing.
 
     Parameters
     ----------
-    batched_fn : callable
+    batched_fn : callable, optional
         ``batched_fn(*stacked_args) -> stacked_out`` where every arg/out has
-        a leading slot axis.  This is the "aggregation region" body: one
-        traced function shared by all aggregated tasks (SGMT by construction).
+        a leading slot axis.  Registered as the default kernel family under
+        ``name``; further families via :meth:`register`.  The body is one
+        traced function shared by all its aggregated tasks (SGMT by
+        construction), and serves every task shape submitted to it (each
+        distinct shape opens its own region over the same body).
     config : AggregationConfig
         ``max_aggregated`` caps the bucket size (the paper's second launch
         criterion); ``n_executors`` sizes the underlying executor pool
@@ -159,107 +286,192 @@ class AggregationExecutor:
         the seed's host staging.
     """
 
-    def __init__(self, batched_fn: Callable, config: AggregationConfig,
+    def __init__(self, batched_fn: Optional[Callable] = None,
+                 config: Optional[AggregationConfig] = None,
                  pool: Optional[ExecutorPool] = None,
                  buffer_pool: Optional[BufferPool] = None,
                  donate: bool = False,
                  name: str = "region"):
         self.name = name
-        self.config = config
-        self.pool = pool or ExecutorPool(config.n_executors)
+        self.config = config or AggregationConfig()
+        self.pool = pool or ExecutorPool(self.config.n_executors)
         self.buffers = buffer_pool or DEFAULT_POOL
-        self.ring: Optional[SlotRing] = None
-        self._queue: List[_Pending] = []
-        self._buckets = tuple(sorted(config.bucket_sizes()))
-        self._compiled: Dict[Tuple[str, int], Callable] = {}
-        self._batched_fn = batched_fn
+        self._buckets = tuple(sorted(self.config.bucket_sizes()))
         self._donate = donate
-        self._staging = getattr(config, "staging", "device")
+        self._staging = getattr(self.config, "staging", "device")
         if self._staging not in ("device", "host"):
             raise ValueError(f"unknown staging mode {self._staging!r}")
-        # shared shape-polymorphic wrappers (jit re-specializes per shape,
-        # so ONE wrapper serves every bucket / parent shape)
-        self._host_jit = jax.jit(
-            self._batched_fn, donate_argnums=(0,) if donate else ())
-        self._gather_jit = jax.jit(self._apply_gathered)
-        # statistics for the benchmark tables
+        self._bodies: Dict[str, Callable] = {}
+        self._regions: Dict[TaskSignature, _Region] = {}
+        self._default_kernel: Optional[str] = None
+        # one-entry routing cache for SlotView waves: (kernel, parents, sig).
+        # A wave's submissions share one parent set, so identity-comparing
+        # the parents skips the per-task signature rebuild on the hot path.
+        self._sig_cache: Optional[Tuple[str, Tuple[Any, ...],
+                                        TaskSignature]] = None
+        # statistics for the benchmark tables; per-family bucket histograms
+        # live under "regions" (the multi-signature observability surface)
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
-                      "staging_s": 0.0}
+                      "staging_s": 0.0, "regions": {}}
+        if batched_fn is not None:
+            self.register(name, batched_fn)
 
-    # -- bucketed programs -------------------------------------------------
-    def _apply_gathered(self, idx, *parents):
-        """Index-batched staging: one gather feeds the aggregation body."""
-        return self._batched_fn(*(jnp.take(p, idx, axis=0) for p in parents))
+    # -- region registry ---------------------------------------------------
+    def register(self, kernel: str, batched_fn: Callable,
+                 default: bool = False) -> str:
+        """Register a kernel family's batched body.  The first registration
+        (or ``default=True``) becomes the default for untagged submissions.
+        Regions themselves are opened lazily, one per task signature."""
+        if kernel in self._bodies and self._bodies[kernel] is not batched_fn:
+            raise ValueError(
+                f"kernel {kernel!r} already registered with a different body")
+        self._bodies[kernel] = batched_fn
+        if default or self._default_kernel is None:
+            self._default_kernel = kernel
+        return kernel
 
-    def _apply_ring_prefix(self, bucket: int, start, *rings):
-        """Ring staging: the bucket reads a zero-copy view of the filled
-        prefix [start, start+bucket) straight out of the slot ring."""
-        sliced = tuple(jax.lax.dynamic_slice_in_dim(r, start, bucket, axis=0)
-                       for r in rings)
-        return self._batched_fn(*sliced)
+    def _region_for(self, kernel: str, args: Sequence[Any]) -> _Region:
+        sig = TaskSignature.from_args(kernel, args)
+        region = self._regions.get(sig)
+        if region is None:
+            body = self._bodies.get(kernel)
+            if body is None:
+                raise KeyError(f"no batched body registered for kernel "
+                               f"{kernel!r} (have {sorted(self._bodies)})")
+            region = _Region(sig, body, self._donate)
+            self._regions[sig] = region
+            self.stats["regions"][sig.describe()] = region.stats
+        return region
 
-    # -- compilation cache -------------------------------------------------
-    # Each bucket size is a genuinely distinct XLA program (static shapes),
-    # cached under ("ring"|"host", bucket).  ``warmup`` replaces the lazy
-    # jit wrappers with AOT ``.lower().compile()`` executables so the first
-    # submission wave never hits the tracer (CPPuddle's startup-time
-    # executor allocation analogue).
-    def compiled_for(self, bucket: int, mode: str = "ring") -> Callable:
-        # "ring" entries may be AOT-specialized to the ring buffer shapes by
-        # warmup; "prefix" entries serve arbitrary parents (shape-polymorphic
-        # jit) for contiguous SlotView runs.
-        key = (mode, bucket)
-        fn = self._compiled.get(key)
-        if fn is None:
-            if mode in ("ring", "prefix"):
-                fn = jax.jit(partial(self._apply_ring_prefix, bucket))
-            else:
-                fn = self._host_jit
-            self._compiled[key] = fn
-        return fn
+    def _region_for_views(self, kernel: str,
+                          views: Sequence[SlotView]) -> _Region:
+        """Region routing for all-SlotView submissions, cached on the
+        parent-set identity (strong refs keep ids valid)."""
+        parents = tuple(v.parent for v in views)
+        c = self._sig_cache
+        if (c is not None and c[0] == kernel and len(c[1]) == len(parents)
+                and all(a is b for a, b in zip(c[1], parents))):
+            region = self._regions.get(c[2])
+            if region is not None:
+                return region
+        region = self._region_for(kernel, views)
+        self._sig_cache = (kernel, parents, region.signature)
+        return region
 
-    def _ensure_ring(self, example_args: Sequence[Any]) -> SlotRing:
-        if self.ring is None:
-            self.ring = SlotRing(self.config.max_aggregated, example_args)
-        return self.ring
+    def _resolve_kernel(self, kernel: Optional[str]) -> str:
+        kernel = kernel or self._default_kernel
+        if kernel is None:
+            raise RuntimeError("no kernel family registered — pass "
+                               "batched_fn to the constructor or register()")
+        return kernel
 
-    def warmup(self, example_args: Tuple[Any, ...]) -> None:
+    @property
+    def regions(self) -> Dict[TaskSignature, "_Region"]:
+        """Live region registry (read-only view)."""
+        return dict(self._regions)
+
+    # -- single-region compatibility views --------------------------------
+    def _sole_region(self) -> Optional[_Region]:
+        if len(self._regions) == 1:
+            return next(iter(self._regions.values()))
+        return None
+
+    @property
+    def ring(self) -> Optional[SlotRing]:
+        region = self._sole_region()
+        return region.ring if region is not None else None
+
+    @property
+    def _queue(self) -> List[_Pending]:
+        out: List[_Pending] = []
+        for region in self._regions.values():
+            out.extend(region.queue)
+        return out
+
+    @property
+    def _compiled(self) -> Dict[Tuple, Callable]:
+        region = self._sole_region()
+        if region is not None:
+            return region.compiled
+        merged: Dict[Tuple, Callable] = {}
+        for region in self._regions.values():
+            merged.update(region.compiled)
+        return merged
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, example_args: Optional[Tuple[Any, ...]] = None, *,
+               kernel: Optional[str] = None,
+               parent_shapes: Optional[Sequence[Any]] = None) -> None:
         """AOT pre-compile every bucket size (amortized startup, like stream
         pre-allocation in CPPuddle).
 
         Buckets are lowered with ``.lower().compile()`` — no example
         execution, no broadcast staging, and no tracer hit on the first
-        real submission.  (Gather-mode programs specialize on the parent
-        array's shape, which is only known at submit time; they stay lazily
-        jitted.)
+        real submission.  Two modes, combinable:
+
+        * ``example_args`` — per-task example inputs; pre-compiles the slot
+          ring (device staging) or host-stacked (host staging) buckets.
+        * ``parent_shapes`` — shapes/dtypes of the parent arrays that
+          ``submit_indexed`` will reference (arrays or ShapeDtypeStructs);
+          pre-compiles the indexed-gather AND contiguous-prefix programs
+          those submissions hit, closing the gather-mode warmup gap
+          (DESIGN.md §6 -> §7).
         """
-        specs = [jax.ShapeDtypeStruct(np.shape(a), jnp.asarray(a).dtype)
+        kernel = self._resolve_kernel(kernel)
+        if parent_shapes is not None:
+            parents = tuple(jax.ShapeDtypeStruct(tuple(p.shape), p.dtype)
+                            for p in parent_shapes)
+            task_specs = tuple(jax.ShapeDtypeStruct(p.shape[1:], p.dtype)
+                               for p in parents)
+            region = self._region_for(kernel, task_specs)
+            pk = tuple(tuple(p.shape) for p in parents)
+            start = jax.ShapeDtypeStruct((), jnp.int32)
+            n_parent = min(p.shape[0] for p in parents)
+            for b in (b for b in self._buckets if b <= n_parent):
+                idx = jax.ShapeDtypeStruct((b,), jnp.int32)
+                region.compiled[("gather", b, pk)] = jax.jit(
+                    region._apply_gathered).lower(idx, *parents).compile()
+                region.compiled[("prefix_aot", b, pk)] = jax.jit(
+                    partial(region._apply_ring_prefix, b)).lower(
+                        start, *parents).compile()
+            if example_args is None:
+                return
+        if example_args is None:
+            raise ValueError("warmup needs example_args and/or parent_shapes")
+        region = self._region_for(kernel, example_args)
+        specs = [jax.ShapeDtypeStruct(tuple(np.shape(a)),
+                                      getattr(a, "dtype", None)
+                                      or jnp.asarray(a).dtype)
                  for a in example_args]
         start = jax.ShapeDtypeStruct((), jnp.int32)
         if self._staging == "device":
-            ring = self._ensure_ring(example_args)
+            ring = region.ensure_ring(self.config.max_aggregated,
+                                      example_args)
             ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
                           for r in ring.buffers()]
             for b in self._buckets:
-                fn = jax.jit(partial(self._apply_ring_prefix, b))
-                self._compiled[("ring", b)] = fn.lower(
+                fn = jax.jit(partial(region._apply_ring_prefix, b))
+                region.compiled[("ring", b)] = fn.lower(
                     start, *ring_specs).compile()
         else:
             for b in self._buckets:
                 stacked = tuple(
                     jax.ShapeDtypeStruct((b,) + s.shape, s.dtype)
                     for s in specs)
-                self._compiled[("host", b)] = self._host_jit.lower(
+                region.compiled[("host", b)] = region.host_jit.lower(
                     *stacked).compile()
 
     # -- submission API ----------------------------------------------------
-    def submit(self, *args) -> TaskFuture:
-        """Queue one task.  Args are either concrete per-task arrays (staged
-        into the slot ring) or all :class:`SlotView` references (staged by a
-        single gather at launch)."""
+    def submit(self, *args, kernel: Optional[str] = None) -> TaskFuture:
+        """Queue one task, routed to its signature's region.  Args are
+        either concrete per-task arrays (staged into the region's slot ring)
+        or all :class:`SlotView` references (staged by a single gather at
+        launch)."""
+        kernel = self._resolve_kernel(kernel)
         fut = TaskFuture()
         is_ref = bool(args) and all(isinstance(a, SlotView) for a in args)
         if is_ref and self._staging == "device":
+            region = self._region_for_views(kernel, args)
             if any(v.index != args[0].index for v in args[1:]):
                 raise ValueError(
                     "SlotView args of one task must share one index — a "
@@ -267,48 +479,52 @@ class AggregationExecutor:
                     "(use submit_indexed)")
             entry = _Pending(future=fut, views=tuple(args))
         elif self._staging == "host" or not args:
+            region = self._region_for(kernel, args)
             args = tuple(a.parent[a.index] if isinstance(a, SlotView) else a
                          for a in args)
             entry = _Pending(future=fut, args=args)
         else:
+            region = self._region_for(kernel, args)
             args = tuple(a.parent[a.index] if isinstance(a, SlotView) else a
                          for a in args)
             t0 = time.perf_counter()
-            ring = self._ensure_ring(args)
+            ring = region.ensure_ring(self.config.max_aggregated, args)
             if ring.fill >= ring.capacity:
                 # watermark remainders left a partial prefix consumed; slide
                 # the live tail to the front (one fused device op)
-                first = self._queue[0].slot if self._queue else ring.fill
+                first = region.queue[0].slot if region.queue else ring.fill
                 ring.compact(first)
-                for p in self._queue:
+                for p in region.queue:
                     p.slot -= first
             entry = _Pending(future=fut, slot=ring.write(args))
             self.stats["staging_s"] += time.perf_counter() - t0
-        self._check_mode(entry)
-        self._queue.append(entry)
+        self._check_mode(region, entry)
+        region.queue.append(entry)
         self.stats["submitted"] += 1
+        region.stats["submitted"] += 1
         self._maybe_launch()
         return fut
 
-    def submit_indexed(self, parents: Tuple[jax.Array, ...],
-                       index: int) -> TaskFuture:
+    def submit_indexed(self, parents: Tuple[jax.Array, ...], index: int,
+                       kernel: Optional[str] = None) -> TaskFuture:
         """Sugar: submit task ``i`` whose j-th arg is ``parents[j][i]``."""
-        return self.submit(*(SlotView(p, index) for p in parents))
+        return self.submit(*(SlotView(p, index) for p in parents),
+                           kernel=kernel)
 
-    def _check_mode(self, entry: _Pending) -> None:
+    def _check_mode(self, region: _Region, entry: _Pending) -> None:
         """A bucket must stage uniformly: same mode, and for ref entries the
         same parent arrays (a launch gathers from ONE parent set).  Launch
-        what's queued before admitting an incompatible entry."""
-        if not self._queue:
+        the region's queue before admitting an incompatible entry."""
+        if not region.queue:
             return
-        head = self._queue[0]
+        head = region.queue[0]
         compatible = self._entry_mode(head) == self._entry_mode(entry)
         if compatible and entry.views is not None:
             compatible = all(a.parent is b.parent
                              for a, b in zip(head.views, entry.views))
         if not compatible:
-            while self._queue:
-                self._launch(self._largest_bucket(len(self._queue)))
+            while region.queue:
+                self._launch(region, self._largest_bucket(len(region.queue)))
 
     @staticmethod
     def _entry_mode(entry: _Pending) -> str:
@@ -319,16 +535,22 @@ class AggregationExecutor:
         return "ring"
 
     def _maybe_launch(self) -> None:
-        """The paper's launch policy: launch when (a) the cap is reached, or
-        (b) an underlying executor is idle; otherwise keep aggregating."""
-        while self._queue:
-            q = len(self._queue)
-            if q >= self.config.max_aggregated:
-                self._launch(self.config.max_aggregated)
-            elif q >= self.config.launch_watermark and self.pool.any_idle():
-                self._launch(self._largest_bucket(q))
-            else:
-                break
+        """The paper's launch policy, per region: launch when (a) the cap is
+        reached, or (b) an underlying executor is idle; otherwise keep
+        aggregating.  Regions progress independently — a full family never
+        stalls behind another family's partial queue."""
+        progress = True
+        while progress:
+            progress = False
+            for region in self._regions.values():
+                q = len(region.queue)
+                if q >= self.config.max_aggregated:
+                    self._launch(region, self.config.max_aggregated)
+                    progress = True
+                elif (q >= self.config.launch_watermark
+                      and self.pool.any_idle()):
+                    self._launch(region, self._largest_bucket(q))
+                    progress = True
 
     def _largest_bucket(self, k: int) -> int:
         best = self._buckets[0]
@@ -337,24 +559,28 @@ class AggregationExecutor:
                 best = b
         return best
 
-    def _launch(self, k: int) -> None:
-        tasks, self._queue = self._queue[:k], self._queue[k:]
+    def _launch(self, region: _Region, k: int) -> None:
+        tasks, region.queue = region.queue[:k], region.queue[k:]
         mode = self._entry_mode(tasks[0])
         t0 = time.perf_counter()
         if mode == "ref":
             indices = [t.views[0].index for t in tasks]
             parents = tuple(v.parent for v in tasks[0].views)
+            pk = tuple(tuple(p.shape) for p in parents)
             if indices == list(range(indices[0], indices[0] + k)):
                 # contiguous slot run: one dynamic slice of the parent (the
                 # parent IS the ring) — no gather, no index array
-                fn = self.compiled_for(k, "prefix")
+                fn = (region.compiled.get(("prefix_aot", k, pk))
+                      or region.compiled_for(k, "prefix"))
                 call_args = (jnp.int32(indices[0]),) + parents
             else:
                 idx = jnp.asarray(indices, jnp.int32)
-                fn, call_args = self._gather_jit, (idx,) + parents
+                fn = (region.compiled.get(("gather", k, pk))
+                      or region.gather_jit)
+                call_args = (idx,) + parents
         elif mode == "ring":
-            fn = self.compiled_for(k, "ring")
-            call_args = (jnp.int32(tasks[0].slot),) + self.ring.buffers()
+            fn = region.compiled_for(k, "ring")
+            call_args = (jnp.int32(tasks[0].slot),) + region.ring.buffers()
         else:
             stacked = []
             for j in range(len(tasks[0].args)):
@@ -365,28 +591,42 @@ class AggregationExecutor:
                     stacked.append(jnp.stack(parts))
                 else:
                     stacked.append(jnp.asarray(self.buffers.stage(parts)))
-            fn = self._compiled.get(("host", k), self._host_jit)
+            fn = region.compiled.get(("host", k), region.host_jit)
             call_args = tuple(stacked)
         self.stats["staging_s"] += time.perf_counter() - t0
         exe = self.pool.get()
-        out = exe.launch(fn, *call_args)
+        out = exe.launch(fn, *call_args, family=region.signature.kernel)
         for slot, t in enumerate(tasks):
             t.future._fulfil(out, slot)
-        if mode == "ring" and not self._queue:
-            self.ring.swap()      # in-flight launch keeps the old buffer
+        if mode == "ring" and not region.queue:
+            region.ring.swap()    # in-flight launch keeps the old buffer
         self.stats["launches"] += 1
         hist = self.stats["aggregated_hist"]
         hist[k] = hist.get(k, 0) + 1
+        region.stats["launches"] += 1
+        rhist = region.stats["aggregated_hist"]
+        rhist[k] = rhist.get(k, 0) + 1
 
     def flush(self) -> None:
-        """Launch everything still queued (greedy buckets) and drain."""
-        while self._queue:
-            self._launch(self._largest_bucket(len(self._queue)))
+        """Launch everything still queued (greedy buckets) and drain.
+        Live regions are drained round-robin — one launch per family per
+        pass — so interleaved families pipeline on the device."""
+        live = [r for r in self._regions.values() if r.queue]
+        while live:
+            for region in live:
+                if region.queue:
+                    self._launch(region,
+                                 self._largest_bucket(len(region.queue)))
+            live = [r for r in live if r.queue]
         self.pool.drain()
+        # the routing cache holds strong refs to the last wave's parent
+        # arrays; the wave is over, release them (next wave re-primes)
+        self._sig_cache = None
 
-    def map(self, task_args: Sequence[Tuple[Any, ...]]) -> List[Any]:
+    def map(self, task_args: Sequence[Tuple[Any, ...]],
+            kernel: Optional[str] = None) -> List[Any]:
         """Submit many tasks, flush, return their results in order."""
-        futs = [self.submit(*a) for a in task_args]
+        futs = [self.submit(*a, kernel=kernel) for a in task_args]
         self.flush()
         return [f.result() for f in futs]
 

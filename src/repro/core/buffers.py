@@ -73,10 +73,11 @@ DEFAULT_POOL = BufferPool()
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, donate_argnums=(0,))
-def _write_slot(ring, value, slot):
-    """In-place slot write: ring[slot] = value (ring buffer donated)."""
+def _write_block(ring, block, start):
+    """In-place contiguous block write: ring[start:start+k] = block (ring
+    donated).  One donated scatter covers k pending slot writes."""
     return jax.lax.dynamic_update_slice(
-        ring, value[None], (slot,) + (0,) * value.ndim)
+        ring, block, (start,) + (0,) * (block.ndim - 1))
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -95,6 +96,12 @@ class SlotRing:
     active, so new writes never chain a data dependency onto a ring an
     in-flight kernel is still reading (classic double buffering).
 
+    Slot writes are *coalesced*: ``write`` only records the task's inputs
+    host-side; the next ``commit`` (implicit in ``buffers``/``compact``)
+    materializes every pending slot with ONE donated contiguous scatter per
+    kernel argument instead of one ``dynamic_update_slice`` per task — k
+    queued tasks cost one device write, not k.
+
     When the active buffer fills while a remainder is still queued (possible
     under watermark-triggered partial launches), ``compact`` rolls the live
     suffix to the front — a single fused device op, no host copies.
@@ -104,15 +111,19 @@ class SlotRing:
                  n_buffers: int = 2):
         assert capacity >= 1 and n_buffers >= 1
         self.capacity = capacity
-        self._specs = [(tuple(np.shape(a)), jnp.asarray(a).dtype)
+        self._specs = [(tuple(np.shape(a)),
+                        getattr(a, "dtype", None) or jnp.asarray(a).dtype)
                        for a in example_args]
         self._bufs = [
             [jnp.zeros((capacity,) + shape, dtype)
              for shape, dtype in self._specs]
             for _ in range(n_buffers)]
         self._active = 0
-        self.fill = 0                 # next free slot in the active buffer
-        self.writes = 0               # statistics
+        self._pending: List[Tuple[Any, ...]] = []
+        self._committed = 0           # slots materialized on device
+        self.fill = 0                 # next free slot (incl. pending writes)
+        self.writes = 0               # statistics: logical slot writes
+        self.commits = 0              # donated-scatter flushes (1 per batch)
         self.compactions = 0
         self.swaps = 0
 
@@ -121,36 +132,58 @@ class SlotRing:
         return len(self._specs)
 
     def buffers(self) -> Tuple[jax.Array, ...]:
-        """The active ring buffers (one per kernel argument)."""
+        """The active ring buffers (one per kernel argument), with every
+        pending write committed."""
+        self.commit()
         return tuple(self._bufs[self._active])
 
     def write(self, args: Sequence[Any]) -> int:
-        """Write one task's inputs into the next free slot; returns the slot.
+        """Claim the next free slot for one task's inputs; returns the slot.
 
-        The caller must ``compact``/reset before writing to a full ring.
+        The write is deferred: inputs are queued host-side and coalesced
+        into one donated scatter at the next ``commit``.  The caller must
+        ``compact``/reset before writing to a full ring.
         """
         assert self.fill < self.capacity, "ring full — compact first"
         slot = self.fill
-        active = self._bufs[self._active]
-        s = jnp.int32(slot)
-        for j, a in enumerate(args):
-            active[j] = _write_slot(active[j], jnp.asarray(a), s)
+        self._pending.append(tuple(args))
         self.fill += 1
         self.writes += 1
         return slot
 
+    def commit(self) -> None:
+        """Materialize pending writes: one donated contiguous scatter per
+        kernel argument covers all k pending slots."""
+        if not self._pending:
+            return
+        active = self._bufs[self._active]
+        start = jnp.int32(self._committed)
+        for j in range(len(active)):
+            if len(self._pending) == 1:
+                block = jnp.asarray(self._pending[0][j])[None]
+            else:
+                block = jnp.stack([jnp.asarray(p[j]) for p in self._pending])
+            active[j] = _write_block(active[j], block, start)
+        self._committed = self.fill
+        self._pending.clear()
+        self.commits += 1
+
     def compact(self, start: int) -> None:
         """Renumber live slots [start:fill) down to [0, fill-start)."""
+        self.commit()
         active = self._bufs[self._active]
         s = jnp.int32(start)
         for j in range(len(active)):
             active[j] = _compact(active[j], s)
         self.fill -= start
+        self._committed = self.fill
         self.compactions += 1
 
     def swap(self) -> None:
         """Switch to the other buffer and reset the fill cursor (called when
         the queue drains, so the just-launched ring stays untouched)."""
+        self.commit()                 # never strand writes on the old buffer
         self._active = (self._active + 1) % len(self._bufs)
         self.fill = 0
+        self._committed = 0
         self.swaps += 1

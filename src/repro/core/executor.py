@@ -42,14 +42,21 @@ class DeviceExecutor:
         self._inflight: List[Any] = []
         self._max_tracked = max_inflight_tracked
         self.launches = 0           # statistics
+        self.launches_by_family: dict = {}   # kernel-family tag -> count
         self.dispatch_s = 0.0       # host time spent enqueueing launches
 
-    def launch(self, fn: Callable, *args) -> Any:
-        """Enqueue fn(*args) (async under XLA) and track its outputs."""
+    def launch(self, fn: Callable, *args, family: Optional[str] = None) -> Any:
+        """Enqueue fn(*args) (async under XLA) and track its outputs.
+
+        ``family`` tags the launch with its kernel family (TaskSignature
+        kernel id) so interleaved multi-region dispatch is observable."""
         t0 = time.perf_counter()
         out = fn(*args)
         self.dispatch_s += time.perf_counter() - t0
         self.launches += 1
+        if family is not None:
+            self.launches_by_family[family] = \
+                self.launches_by_family.get(family, 0) + 1
         leaves = jax.tree_util.tree_leaves(out)
         if leaves:
             self._inflight.append(leaves[-1])
@@ -103,3 +110,12 @@ class ExecutorPool:
         """Aggregate host dispatch wall time (the launch-overhead metric
         reported by benchmarks/launch_overhead.py)."""
         return sum(e.dispatch_s for e in self.executors)
+
+    @property
+    def launches_by_family(self) -> dict:
+        """Pool-wide launch counts per kernel family tag."""
+        out: dict = {}
+        for e in self.executors:
+            for k, v in e.launches_by_family.items():
+                out[k] = out.get(k, 0) + v
+        return out

@@ -37,11 +37,15 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AggregationConfig, HydroConfig
+from repro.configs.base import AMRHydroConfig, AggregationConfig, HydroConfig
 from repro.core.aggregation import AggregationExecutor, gather_futures
 from repro.core.executor import ExecutorPool
-from repro.hydro.state import assemble_global, extract_subgrids
-from repro.hydro.stepper import subgrid_rhs
+from repro.hydro.state import (
+    assemble_global, extract_subgrids, extract_subgrids_multilevel,
+)
+from repro.hydro.stepper import (
+    amr_rk3_step, level_batched_body, level_batched_jit, subgrid_rhs,
+)
 
 
 def xla_task_body(cfg: HydroConfig, h: float) -> Callable:
@@ -117,6 +121,10 @@ class HydroStrategyRunner:
             self.stats["kernel_launches"] += n
         elif self.strategy in ("s3", "s2+s3"):
             exe = self._agg_exec
+            # every strategy reports per-call DELTAS (+=); the executor's own
+            # counters are cumulative, so snapshot around the submission wave
+            before_launches = exe.stats["launches"]
+            before_staging = exe.stats["staging_s"]
             if self.agg.staging == "host":
                 # the seed's path, kept measurable: slice each task apart on
                 # the host queue, re-stack per launch
@@ -125,8 +133,9 @@ class HydroStrategyRunner:
                 futs = [exe.submit_indexed((subs,), i) for i in range(n)]
             exe.flush()
             out = gather_futures(futs)
-            self.stats["staging_s"] = exe.stats["staging_s"]
-            self.stats["kernel_launches"] = exe.stats["launches"]
+            self.stats["staging_s"] += exe.stats["staging_s"] - before_staging
+            self.stats["kernel_launches"] += (exe.stats["launches"]
+                                              - before_launches)
         else:
             raise ValueError(f"unknown strategy {self.strategy!r}")
         return assemble_global(out, self.cfg.subgrid)
@@ -190,4 +199,149 @@ class HydroStrategyRunner:
             for _ in range(n_steps):
                 out = self.rk3_step(out, dt)
         jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n_steps
+
+
+# ---------------------------------------------------------------------------
+# Two-level AMR runner: a mixed coarse+fine task population through one
+# multi-region AggregationExecutor
+# ---------------------------------------------------------------------------
+
+class AMRStrategyRunner:
+    """Drives the two-level refined Sedov scenario under every strategy.
+
+    Each RK3 iteration produces a *mixed* task list — every coarse sub-grid
+    and every fine sub-grid, with per-level cell width ``h`` as a traced
+    per-task argument.  Under s3/s2+s3 both levels flow through ONE
+    :class:`AggregationExecutor`: levels whose sub-grid shapes agree share a
+    single ``TaskSignature`` family (the same compiled buckets serve both),
+    while mixed sub-grid sizes open two families that aggregate concurrently
+    (distinct rings/buckets, interleaved launches).
+
+    All strategies are bit-identical to the per-level fused reference
+    (``repro.hydro.stepper.amr_reference_rhs``) — enforced by
+    tests/test_amr.py.
+    """
+
+    def __init__(self, cfg: AMRHydroConfig, agg: AggregationConfig,
+                 bc: str = "outflow"):
+        self.cfg = cfg
+        self.agg = agg
+        self.bc = bc
+        self.strategy = agg.strategy
+        dtype = jnp.dtype(cfg.dtype)
+        self._levels = ("coarse", "fine")
+        self._subgrid = {"coarse": cfg.coarse_subgrid,
+                         "fine": cfg.fine_subgrid}
+        self._h = {
+            "coarse": jnp.full((cfg.n_subgrids_coarse,), cfg.h_coarse, dtype),
+            "fine": jnp.full((cfg.n_subgrids_fine,), cfg.h_fine, dtype),
+        }
+        # one body per DISTINCT sub-grid size; equal sizes share everything
+        # (kernel id, region, compiled buckets) — the shape-agreement case
+        self._kernel = {lvl: f"hydro_rhs_s{self._subgrid[lvl]}"
+                        for lvl in self._levels}
+        self._batched = {s: level_batched_body(cfg.gamma, cfg.ghost, s)
+                         for s in set(self._subgrid.values())}
+        self._jit_batched = {s: level_batched_jit(cfg.gamma, cfg.ghost, s)
+                             for s in set(self._subgrid.values())}
+        self._s2_scatter = {s: self._make_s2_scatter(self._batched[s])
+                            for s in set(self._subgrid.values())}
+        self.pool = ExecutorPool(max(1, agg.n_executors))
+        self._agg_exec: Optional[AggregationExecutor] = None
+        if self.strategy in ("s3", "s2+s3"):
+            self._agg_exec = AggregationExecutor(
+                None, agg, pool=self.pool, name="amr_hydro_rhs")
+            for s in set(self._subgrid.values()):
+                self._agg_exec.register(f"hydro_rhs_s{s}", self._batched[s])
+        self.stats: Dict[str, float] = {"kernel_launches": 0, "iterations": 0,
+                                        "staging_s": 0.0}
+
+    @staticmethod
+    def _make_s2_scatter(batched):
+        @partial(jax.jit, donate_argnums=(0,))
+        def scatter(out_ring, subs, h_vec, i):
+            task = jax.lax.dynamic_slice_in_dim(subs, i, 1, axis=0)
+            hk = jax.lax.dynamic_slice_in_dim(h_vec, i, 1, axis=0)
+            return jax.lax.dynamic_update_slice(
+                out_ring, batched(task, hk),
+                (i,) + (0,) * (out_ring.ndim - 1))
+        return scatter
+
+    def warmup(self) -> None:
+        """AOT pre-compile every family's gather/prefix buckets from the
+        parent shapes the submission waves will reference."""
+        if self._agg_exec is None:
+            return
+        seen = set()
+        for lvl in self._levels:
+            n = (self.cfg.n_subgrids_coarse if lvl == "coarse"
+                 else self.cfg.n_subgrids_fine)
+            s = self._subgrid[lvl]
+            p = s + 2 * self.cfg.ghost
+            dtype = jnp.dtype(self.cfg.dtype)
+            subs_spec = jax.ShapeDtypeStruct(
+                (n, self.cfg.n_fields, p, p, p), dtype)
+            h_spec = jax.ShapeDtypeStruct((n,), dtype)
+            key = (self._kernel[lvl], subs_spec.shape, h_spec.shape)
+            if key in seen:       # shape-agreeing levels share the programs
+                continue
+            seen.add(key)
+            self._agg_exec.warmup(kernel=self._kernel[lvl],
+                                  parent_shapes=(subs_spec, h_spec))
+
+    # -- one two-level iteration ------------------------------------------
+    def rhs(self, uc: jax.Array, uf: jax.Array):
+        subs = dict(zip(self._levels,
+                        extract_subgrids_multilevel(uc, uf, self.cfg,
+                                                    self.bc)))
+        self.stats["iterations"] += 1
+        out: Dict[str, jax.Array] = {}
+
+        if self.strategy == "fused":
+            for lvl in self._levels:
+                out[lvl] = self._jit_batched[self._subgrid[lvl]](
+                    subs[lvl], self._h[lvl])
+                self.stats["kernel_launches"] += 1
+        elif self.strategy == "s2":
+            for lvl in self._levels:
+                n = subs[lvl].shape[0]
+                s = self._subgrid[lvl]
+                ring = jnp.zeros((n, self.cfg.n_fields, s, s, s),
+                                 subs[lvl].dtype)
+                scatter = self._s2_scatter[s]
+                for i in range(n):
+                    ring = self.pool.get().launch(
+                        scatter, ring, subs[lvl], self._h[lvl], jnp.int32(i))
+                out[lvl] = ring
+                self.stats["kernel_launches"] += n
+        elif self.strategy in ("s3", "s2+s3"):
+            exe = self._agg_exec
+            before_launches = exe.stats["launches"]
+            before_staging = exe.stats["staging_s"]
+            futs = {lvl: [exe.submit_indexed((subs[lvl], self._h[lvl]), i,
+                                             kernel=self._kernel[lvl])
+                          for i in range(subs[lvl].shape[0])]
+                    for lvl in self._levels}
+            exe.flush()
+            for lvl in self._levels:
+                out[lvl] = gather_futures(futs[lvl])
+            self.stats["staging_s"] += exe.stats["staging_s"] - before_staging
+            self.stats["kernel_launches"] += (exe.stats["launches"]
+                                              - before_launches)
+        else:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        return tuple(assemble_global(out[lvl], self._subgrid[lvl])
+                     for lvl in self._levels)
+
+    def rk3_step(self, uc: jax.Array, uf: jax.Array, dt):
+        return amr_rk3_step(self.rhs, uc, uf, dt, self.cfg)
+
+    def time_step(self, uc, uf, dt, n_steps: int = 1) -> float:
+        """Average wall seconds per two-level time-step."""
+        jax.block_until_ready((uc, uf))
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            uc, uf = self.rk3_step(uc, uf, dt)
+        jax.block_until_ready((uc, uf))
         return (time.perf_counter() - t0) / n_steps

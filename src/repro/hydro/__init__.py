@@ -13,9 +13,15 @@ from repro.hydro.euler import (
 from repro.hydro.ppm import DIRECTIONS, DIR_PAIRS, ppm_reconstruct_all
 from repro.hydro.flux import flux_divergence, FACE_QUAD
 from repro.hydro.state import (
-    HydroState, sedov_init, assemble_global, extract_subgrids, fill_ghosts,
+    AMRState, HydroState, amr_sedov_init, assemble_global, extract_subgrids,
+    extract_subgrids_multilevel, fill_ghosts, prolong_coarse, restrict_fine,
+    sedov_init, sync_coarse,
 )
-from repro.hydro.stepper import courant_dt, rk3_step, subgrid_rhs, total_conserved
+from repro.hydro.stepper import (
+    amr_courant_dt, amr_reference_rhs, amr_reference_step, amr_rk3_step,
+    amr_run, courant_dt, level_batched_body, level_batched_jit, rk3_step,
+    subgrid_rhs, total_conserved,
+)
 
 __all__ = [
     "N_FIELDS", "cons_to_prim", "prim_to_cons", "sound_speed", "euler_flux",
@@ -23,4 +29,8 @@ __all__ = [
     "flux_divergence", "FACE_QUAD", "HydroState", "sedov_init",
     "assemble_global", "extract_subgrids", "fill_ghosts", "courant_dt",
     "rk3_step", "subgrid_rhs", "total_conserved",
+    "AMRState", "amr_sedov_init", "extract_subgrids_multilevel",
+    "prolong_coarse", "restrict_fine", "sync_coarse", "amr_courant_dt",
+    "amr_reference_rhs", "amr_reference_step", "amr_rk3_step", "amr_run",
+    "level_batched_body", "level_batched_jit",
 ]

@@ -7,6 +7,13 @@ the aggregation strategies; ``assemble_global``/``extract_subgrids`` convert
 between it and the assembled ``(F, N, N, N)`` grid.  The extract is the
 ghost-exchange: in the distributed runtime it lowers to halo collectives, on
 one device it is a pad + gather.
+
+The two-level AMR section (DESIGN.md §7) adds a centred fine patch at
+``refine_ratio`` x resolution: ``extract_subgrids_multilevel`` performs the
+coarse-fine exchange (block-mean restriction onto the covered coarse cells,
+piecewise-constant prolongation into the fine ghost band) and decomposes
+BOTH levels into their per-task views — the mixed task population the
+multi-region aggregation runtime serves.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import HydroConfig
+from repro.configs.base import AMRHydroConfig, HydroConfig
 from repro.hydro.euler import N_FIELDS, prim_to_cons
 
 
@@ -68,13 +75,10 @@ def fill_ghosts(u, ghost: int, bc: str = "outflow"):
     return jnp.pad(u, pads, mode="edge")
 
 
-@partial(jax.jit, static_argnames=("subgrid", "ghost", "bc"))
-def extract_subgrids(u, subgrid: int, ghost: int, bc: str = "outflow"):
-    """Assembled (F, N, N, N) -> per-task (G^3, F, P, P, P) padded sub-grids."""
-    n = u.shape[-1]
+def _extract_padded(up, n_interior: int, subgrid: int, ghost: int):
+    """Already-padded (F, N+2g, ...) -> per-task (G^3, F, P, P, P) views."""
     s, g = subgrid, ghost
-    grids = n // s
-    up = fill_ghosts(u, g, bc)
+    grids = n_interior // s
 
     idx = jnp.arange(grids) * s
     starts = jnp.stack(jnp.meshgrid(idx, idx, idx, indexing="ij"),
@@ -83,9 +87,16 @@ def extract_subgrids(u, subgrid: int, ghost: int, bc: str = "outflow"):
     def one(st):
         return jax.lax.dynamic_slice(
             up, (0, st[0], st[1], st[2]),
-            (u.shape[0], s + 2 * g, s + 2 * g, s + 2 * g))
+            (up.shape[0], s + 2 * g, s + 2 * g, s + 2 * g))
 
     return jax.vmap(one)(starts)
+
+
+@partial(jax.jit, static_argnames=("subgrid", "ghost", "bc"))
+def extract_subgrids(u, subgrid: int, ghost: int, bc: str = "outflow"):
+    """Assembled (F, N, N, N) -> per-task (G^3, F, P, P, P) padded sub-grids."""
+    return _extract_padded(fill_ghosts(u, ghost, bc), u.shape[-1],
+                           subgrid, ghost)
 
 
 @partial(jax.jit, static_argnames=("subgrid",))
@@ -102,3 +113,115 @@ def subgrid_starts(cfg: HydroConfig):
     idx = jnp.arange(cfg.grids_per_edge) * cfg.subgrid
     return jnp.stack(jnp.meshgrid(idx, idx, idx, indexing="ij"),
                      axis=-1).reshape(-1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Two-level AMR: coarse grid + one centred fine patch (refine_ratio x)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AMRState:
+    """Two-level refined state: assembled per-level conserved grids."""
+    uc: jax.Array         # (F, Nc, Nc, Nc) coarse level, whole domain
+    uf: jax.Array         # (F, Nf, Nf, Nf) fine level, centred patch
+    t: float
+    step: int
+
+
+def restrict_fine(uf, ratio: int = 2):
+    """Fine -> coarse: average each ratio^3 block (conservative for equal
+    cell volumes within a block)."""
+    f, n = uf.shape[0], uf.shape[-1]
+    m = n // ratio
+    x = uf.reshape(f, m, ratio, m, ratio, m, ratio)
+    return x.mean(axis=(2, 4, 6))
+
+
+def prolong_coarse(uc, ratio: int = 2):
+    """Coarse -> fine: piecewise-constant injection (each coarse cell fills
+    its ratio^3 children)."""
+    for axis in (1, 2, 3):
+        uc = jnp.repeat(uc, ratio, axis=axis)
+    return uc
+
+
+def _sync_coarse(uc, uf, cfg: AMRHydroConfig):
+    """Overwrite the covered coarse cells with the restricted fine solution
+    (the coarse level never free-runs under the patch)."""
+    o, c = cfg.offset, cfg.cover
+    return uc.at[:, o:o + c, o:o + c, o:o + c].set(
+        restrict_fine(uf, cfg.refine_ratio))
+
+
+def _fine_fill_ghosts(uc_synced, uf, cfg: AMRHydroConfig):
+    """Fine (F, Nf, Nf, Nf) -> padded (F, Nf+2g, ...): the ghost band is
+    prolongated from the surrounding (already fine-synced) coarse cells —
+    the coarse-fine boundary exchange."""
+    g, r = cfg.ghost, cfg.refine_ratio
+    gc = cfg.coarse_ghost_pad
+    o, c, nf = cfg.offset, cfg.cover, cfg.n_fine
+    slab = uc_synced[:, o - gc:o + c + gc, o - gc:o + c + gc,
+                     o - gc:o + c + gc]
+    fp = prolong_coarse(slab, r)
+    lo = gc * r - g                   # trim the prolongation to exactly g
+    n = nf + 2 * g
+    fp = fp[:, lo:lo + n, lo:lo + n, lo:lo + n]
+    return fp.at[:, g:g + nf, g:g + nf, g:g + nf].set(uf)
+
+
+@partial(jax.jit, static_argnames=("cfg", "bc"))
+def extract_subgrids_multilevel(uc, uf, cfg: AMRHydroConfig,
+                                bc: str = "outflow"):
+    """Two-level ghost exchange + decomposition.
+
+    Returns ``(subs_coarse, subs_fine)`` padded per-task arrays.  The
+    coarse level sees the restricted fine solution under the patch; the
+    fine level's boundary ghosts are prolongated from the coarse level.
+    """
+    ucs = _sync_coarse(uc, uf, cfg)
+    subs_c = _extract_padded(fill_ghosts(ucs, cfg.ghost, bc),
+                             cfg.n_coarse, cfg.coarse_subgrid, cfg.ghost)
+    subs_f = _extract_padded(_fine_fill_ghosts(ucs, uf, cfg),
+                             cfg.n_fine, cfg.fine_subgrid, cfg.ghost)
+    return subs_c, subs_f
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sync_coarse(uc, uf, cfg: AMRHydroConfig):
+    """Public jitted wrapper of the fine->coarse overlap sync."""
+    return _sync_coarse(uc, uf, cfg)
+
+
+def amr_sedov_init(cfg: AMRHydroConfig, dtype=None) -> AMRState:
+    """Sedov blast centred in the fine patch: the energy deposit lives
+    entirely at fine resolution (r0 = 3.5 fine cells, well inside the
+    patch); the coarse level starts ambient and is synced from the fine.
+    State dtype follows ``cfg.dtype`` (overridable), keeping task
+    signatures consistent with the runners' h vectors and warmup specs."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    hc, hf = cfg.h_coarse, cfg.h_fine
+    nf = cfg.n_fine
+    x0 = cfg.offset * hc - 0.5 * cfg.domain
+    xf = x0 + (jnp.arange(nf) + 0.5) * hf
+    Xf, Yf, Zf = jnp.meshgrid(xf, xf, xf, indexing="ij")
+    r = jnp.sqrt(Xf * Xf + Yf * Yf + Zf * Zf)
+    r0 = 3.5 * hf
+    in_blast = r < r0
+    n_blast = jnp.maximum(jnp.sum(in_blast), 1)
+    e_dens = cfg.blast_energy / (n_blast * hf ** 3)
+    p_blast = (cfg.gamma - 1.0) * e_dens
+    p_ambient = 1e-8
+    rho_f = jnp.full(r.shape, cfg.rho0)
+    p_f = jnp.where(in_blast, p_blast, p_ambient)
+    zeros_f = jnp.zeros_like(rho_f)
+    uf = prim_to_cons(rho_f, zeros_f, zeros_f, zeros_f, p_f,
+                      cfg.gamma).astype(dtype)
+
+    nc = cfg.n_coarse
+    rho_c = jnp.full((nc, nc, nc), cfg.rho0)
+    zeros_c = jnp.zeros_like(rho_c)
+    p_c = jnp.full((nc, nc, nc), p_ambient)
+    uc = prim_to_cons(rho_c, zeros_c, zeros_c, zeros_c, p_c,
+                      cfg.gamma).astype(dtype)
+    uc = sync_coarse(uc, uf, cfg)
+    return AMRState(uc=uc, uf=uf, t=0.0, step=0)

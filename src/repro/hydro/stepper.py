@@ -13,25 +13,49 @@ twin in ``repro.kernels``).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import HydroConfig
+from repro.configs.base import AMRHydroConfig, HydroConfig
 from repro.hydro.euler import max_signal_speed
 from repro.hydro.flux import flux_divergence
 from repro.hydro.ppm import ppm_reconstruct_all
-from repro.hydro.state import HydroState, assemble_global, extract_subgrids
+from repro.hydro.state import (
+    AMRState, HydroState, assemble_global, extract_subgrids,
+    extract_subgrids_multilevel, sync_coarse,
+)
 
 
-def subgrid_rhs(u_padded, h: float, gamma: float, ghost: int, subgrid: int):
+def subgrid_rhs(u_padded, h, gamma: float, ghost: int, subgrid: int):
     """One task: PPM reconstruct + central-upwind flux on one padded sub-grid.
 
     u_padded: (F, P, P, P) -> dU/dt over the interior (F, S, S, S).
+    ``h`` may be a python float (baked at trace time) or a traced scalar —
+    the multi-level runners pass it as a per-task argument so ONE compiled
+    bucket serves every refinement level whose sub-grid shapes agree.
     """
     recon = ppm_reconstruct_all(u_padded)
     return flux_divergence(recon, h, gamma, ghost, subgrid)
+
+
+@lru_cache(maxsize=None)
+def level_batched_body(gamma: float, ghost: int, subgrid: int):
+    """The shape-polymorphic aggregation-region body for one sub-grid size:
+    ``(k, F, P, P, P), (k,) -> (k, F, S, S, S)`` with per-task traced h.
+    Cached so every runner / reference sharing (gamma, ghost, subgrid) gets
+    the SAME callable — and therefore the same compiled programs."""
+    def body(u_padded, h):
+        return subgrid_rhs(u_padded, h, gamma=gamma, ghost=ghost,
+                           subgrid=subgrid)
+    return jax.vmap(body)
+
+
+@lru_cache(maxsize=None)
+def level_batched_jit(gamma: float, ghost: int, subgrid: int):
+    """Jitted twin of :func:`level_batched_body` (per-level fused launch)."""
+    return jax.jit(level_batched_body(gamma, ghost, subgrid))
 
 
 def _rhs_global(u, cfg: HydroConfig, h: float, bc: str):
@@ -98,6 +122,71 @@ def run(state: HydroState, cfg: HydroConfig, n_steps: int,
         u = rk3_step(u, dt, cfg, bc)
         t = t + float(dt)
     return HydroState(u=u, t=t, step=state.step + n_steps)
+
+
+# ---------------------------------------------------------------------------
+# Two-level AMR stepping
+# ---------------------------------------------------------------------------
+
+def amr_rk3_step(rhs_fn, uc, uf, dt, cfg: AMRHydroConfig):
+    """TVD-RK3 over both levels in lockstep (shared dt).
+
+    ``rhs_fn(uc, uf) -> (duc, duf)`` is a strategy runner's rhs or the
+    reference below; the combine arithmetic here is the single shared code
+    path, so runner-vs-reference equivalence reduces to rhs equivalence.
+    The covered coarse cells are re-synced from the fine solution at the
+    end of the step.
+    """
+    dc0, df0 = rhs_fn(uc, uf)
+    uc1, uf1 = uc + dt * dc0, uf + dt * df0
+    dc1, df1 = rhs_fn(uc1, uf1)
+    uc2 = 0.75 * uc + 0.25 * (uc1 + dt * dc1)
+    uf2 = 0.75 * uf + 0.25 * (uf1 + dt * df1)
+    dc2, df2 = rhs_fn(uc2, uf2)
+    uc_new = (1.0 / 3.0) * uc + (2.0 / 3.0) * (uc2 + dt * dc2)
+    uf_new = (1.0 / 3.0) * uf + (2.0 / 3.0) * (uf2 + dt * df2)
+    return sync_coarse(uc_new, uf_new, cfg), uf_new
+
+
+def amr_reference_rhs(uc, uf, cfg: AMRHydroConfig, bc: str = "outflow"):
+    """Per-level FUSED reference: each level's whole task batch as one
+    vmapped launch with per-task traced h.  The equivalence oracle every
+    aggregation strategy must match bit-identically."""
+    subs_c, subs_f = extract_subgrids_multilevel(uc, uf, cfg, bc)
+    dtype = subs_c.dtype
+    hc = jnp.full((subs_c.shape[0],), cfg.h_coarse, dtype)
+    hf = jnp.full((subs_f.shape[0],), cfg.h_fine, dtype)
+    duc = level_batched_jit(cfg.gamma, cfg.ghost, cfg.coarse_subgrid)(
+        subs_c, hc)
+    duf = level_batched_jit(cfg.gamma, cfg.ghost, cfg.fine_subgrid)(
+        subs_f, hf)
+    return (assemble_global(duc, cfg.coarse_subgrid),
+            assemble_global(duf, cfg.fine_subgrid))
+
+
+def amr_reference_step(uc, uf, dt, cfg: AMRHydroConfig,
+                       bc: str = "outflow"):
+    """One RK3 step of the per-level fused reference."""
+    return amr_rk3_step(lambda a, b: amr_reference_rhs(a, b, cfg, bc),
+                        uc, uf, dt, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def amr_courant_dt(uc, uf, cfg: AMRHydroConfig):
+    """Shared two-level Courant dt (the fine level is the binding one)."""
+    return cfg.cfl * jnp.minimum(
+        cfg.h_coarse / max_signal_speed(uc, cfg.gamma),
+        cfg.h_fine / max_signal_speed(uf, cfg.gamma))
+
+
+def amr_run(state: AMRState, cfg: AMRHydroConfig, n_steps: int,
+            bc: str = "outflow") -> AMRState:
+    uc, uf, t = state.uc, state.uf, state.t
+    for _ in range(n_steps):
+        dt = amr_courant_dt(uc, uf, cfg)
+        uc, uf = amr_reference_step(uc, uf, dt, cfg, bc)
+        t = t + float(dt)
+    return AMRState(uc=uc, uf=uf, t=t, step=state.step + n_steps)
 
 
 def shock_radius(u, cfg: HydroConfig):

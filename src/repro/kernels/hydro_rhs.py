@@ -30,7 +30,7 @@ the production XLA path).
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,45 +143,104 @@ def _kernel_slot_grid(u_ref, out_ref, *, h, gamma, ghost, subgrid):
                                   axes=(-3, -2, -1))
 
 
+def _kernel_slot_grid_h(u_ref, h_ref, out_ref, *, gamma, ghost, subgrid):
+    """Per-slot traced cell width: h rides in as a (1, 1) block per task."""
+    u = u_ref[0]                                  # (F, P, P, P)
+    h = h_ref[0, 0]
+    out_ref[0] = _rhs_field_block(u, h, gamma, ghost, subgrid,
+                                  axes=(-3, -2, -1))
+
+
 def _kernel_slot_lane(u_ref, out_ref, *, h, gamma, ghost, subgrid):
     u = u_ref[...]                                # (F, P, P, P, T)
     out_ref[...] = _rhs_field_block(u, h, gamma, ghost, subgrid,
                                     axes=(-4, -3, -2))
 
 
-def hydro_rhs_pallas(u_slots: jax.Array, *, h: float, gamma: float,
+def _kernel_slot_lane_h(u_ref, h_ref, out_ref, *, gamma, ghost, subgrid):
+    u = u_ref[...]                                # (F, P, P, P, T)
+    h = h_ref[...][:, 0]                          # (T,) broadcasts over lanes
+    out_ref[...] = _rhs_field_block(u, h, gamma, ghost, subgrid,
+                                    axes=(-4, -3, -2))
+
+
+def hydro_rhs_pallas(u_slots: jax.Array, *, h: Optional[float] = None,
+                     h_slots: Optional[jax.Array] = None, gamma: float,
                      ghost: int, subgrid: int, layout: str = "slot_grid",
                      lane_tile: int = 8, interpret: bool = True) -> jax.Array:
-    """Aggregated RHS kernel: (slots, F, P, P, P) -> (slots, F, S, S, S)."""
+    """Aggregated RHS kernel: (slots, F, P, P, P) -> (slots, F, S, S, S).
+
+    Cell width comes in one of two forms:
+
+    * ``h``       — a python float baked into the program (uniform grid);
+    * ``h_slots`` — a traced ``(slots,)`` array, one width per aggregated
+      task, staged through SMEM-shaped ``(1, 1)`` blocks.  This is the
+      multi-level mode: one compiled kernel serves every refinement level
+      whose sub-grid shapes agree (matching the XLA path's traced-h bodies).
+    """
+    if (h is None) == (h_slots is None):
+        raise ValueError("pass exactly one of h / h_slots")
     n, f, p = u_slots.shape[0], u_slots.shape[1], u_slots.shape[2]
     s = subgrid
-    kw = dict(h=h, gamma=gamma, ghost=ghost, subgrid=subgrid)
+    kw = dict(gamma=gamma, ghost=ghost, subgrid=subgrid)
+    if h_slots is not None:
+        h2d = jnp.reshape(h_slots, (n, 1))
 
     if layout == "slot_grid":
+        if h_slots is None:
+            return pl.pallas_call(
+                functools.partial(_kernel_slot_grid, h=h, **kw),
+                grid=(n,),
+                in_specs=[pl.BlockSpec((1, f, p, p, p),
+                                       lambda i: (i, 0, 0, 0, 0))],
+                out_specs=pl.BlockSpec((1, f, s, s, s),
+                                       lambda i: (i, 0, 0, 0, 0)),
+                out_shape=jax.ShapeDtypeStruct((n, f, s, s, s),
+                                               u_slots.dtype),
+                interpret=interpret,
+            )(u_slots)
         return pl.pallas_call(
-            functools.partial(_kernel_slot_grid, **kw),
+            functools.partial(_kernel_slot_grid_h, **kw),
             grid=(n,),
-            in_specs=[pl.BlockSpec((1, f, p, p, p), lambda i: (i, 0, 0, 0, 0))],
-            out_specs=pl.BlockSpec((1, f, s, s, s), lambda i: (i, 0, 0, 0, 0)),
+            in_specs=[pl.BlockSpec((1, f, p, p, p),
+                                   lambda i: (i, 0, 0, 0, 0)),
+                      pl.BlockSpec((1, 1), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, f, s, s, s),
+                                   lambda i: (i, 0, 0, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((n, f, s, s, s), u_slots.dtype),
             interpret=interpret,
-        )(u_slots)
+        )(u_slots, h2d)
 
     if layout == "slot_lane":
         # tasks on the minor (lane) axis: (F, P, P, P, slots)
         t = min(lane_tile, n)
         assert n % t == 0, (n, t)
         u_t = u_slots.transpose(1, 2, 3, 4, 0)
-        out = pl.pallas_call(
-            functools.partial(_kernel_slot_lane, **kw),
-            grid=(n // t,),
-            in_specs=[pl.BlockSpec((f, p, p, p, t),
-                                   lambda i: (0, 0, 0, 0, i))],
-            out_specs=pl.BlockSpec((f, s, s, s, t),
-                                   lambda i: (0, 0, 0, 0, i)),
-            out_shape=jax.ShapeDtypeStruct((f, s, s, s, n), u_slots.dtype),
-            interpret=interpret,
-        )(u_t)
+        if h_slots is None:
+            out = pl.pallas_call(
+                functools.partial(_kernel_slot_lane, h=h, **kw),
+                grid=(n // t,),
+                in_specs=[pl.BlockSpec((f, p, p, p, t),
+                                       lambda i: (0, 0, 0, 0, i))],
+                out_specs=pl.BlockSpec((f, s, s, s, t),
+                                       lambda i: (0, 0, 0, 0, i)),
+                out_shape=jax.ShapeDtypeStruct((f, s, s, s, n),
+                                               u_slots.dtype),
+                interpret=interpret,
+            )(u_t)
+        else:
+            out = pl.pallas_call(
+                functools.partial(_kernel_slot_lane_h, **kw),
+                grid=(n // t,),
+                in_specs=[pl.BlockSpec((f, p, p, p, t),
+                                       lambda i: (0, 0, 0, 0, i)),
+                          pl.BlockSpec((t, 1), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((f, s, s, s, t),
+                                       lambda i: (0, 0, 0, 0, i)),
+                out_shape=jax.ShapeDtypeStruct((f, s, s, s, n),
+                                               u_slots.dtype),
+                interpret=interpret,
+            )(u_t, h2d)
         return out.transpose(4, 0, 1, 2, 3)
 
     raise ValueError(f"unknown layout {layout!r}")
@@ -216,6 +275,19 @@ def pallas_batched_body(cfg, h: float, layout: str = "slot_grid",
     def batched(u_slots):
         return hydro_rhs_pallas(u_slots, h=h, gamma=cfg.gamma,
                                 ghost=cfg.ghost, subgrid=cfg.subgrid,
+                                layout=layout, interpret=interpret)
+    return batched
+
+
+def pallas_batched_body_h(gamma: float, ghost: int, subgrid: int,
+                          layout: str = "slot_grid", interpret: bool = True):
+    """Traced-h twin of :func:`pallas_batched_body`: signature
+    ``(u_slots, h_slots) -> out_slots``, drop-in as a multi-level
+    aggregation-region body (matches ``repro.hydro.stepper
+    .level_batched_body``'s calling convention, Pallas-backed)."""
+    def batched(u_slots, h_slots):
+        return hydro_rhs_pallas(u_slots, h_slots=h_slots, gamma=gamma,
+                                ghost=ghost, subgrid=subgrid,
                                 layout=layout, interpret=interpret)
     return batched
 

@@ -1,0 +1,187 @@
+"""Two-level AMR Sedov: every strategy bit-identical to the per-level fused
+reference, with coarse+fine task families aggregating through ONE executor.
+
+The acceptance invariants (ISSUE 2):
+* s2 / s3 / s2+s3 / fused all reproduce ``amr_reference_step`` EXACTLY
+  (assert_array_equal on both levels — the equivalence invariant extended
+  to the genuinely adaptive workload);
+* shape-agreeing levels share one ``TaskSignature`` family (one compiled
+  bucket ladder serves both levels, h being a traced task argument);
+* the mixed sub-grid config drives TWO families concurrently through one
+  executor, asserted via the per-region bucket-histogram stats;
+* prolongation/restriction at the coarse-fine boundary is exact where
+  exactness is defined (constant states, restrict-of-prolong).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
+from repro.configs.base import AMRHydroConfig, AggregationConfig
+from repro.core import AMRStrategyRunner
+from repro.hydro.state import (
+    amr_sedov_init, extract_subgrids_multilevel, prolong_coarse,
+    restrict_fine, sync_coarse,
+)
+from repro.hydro.stepper import (
+    amr_courant_dt, amr_reference_rhs, amr_reference_step, amr_run,
+)
+
+WM = 10 ** 9
+
+
+@pytest.fixture(scope="module")
+def sedov_amr():
+    st = amr_sedov_init(CONFIG)
+    dt = amr_courant_dt(st.uc, st.uf, CONFIG)
+    ref = amr_reference_step(st.uc, st.uf, dt, CONFIG)
+    return st, dt, ref
+
+
+# ---------------------------------------------------------------------------
+# coarse-fine exchange primitives
+# ---------------------------------------------------------------------------
+
+def test_restrict_of_prolong_is_identity():
+    x = jnp.arange(5 * 4 * 4 * 4, dtype=jnp.float32).reshape(5, 4, 4, 4)
+    np.testing.assert_array_equal(
+        np.asarray(restrict_fine(prolong_coarse(x, 2), 2)), np.asarray(x))
+
+
+def test_multilevel_extract_shapes():
+    cfg = CONFIG
+    st = amr_sedov_init(cfg)
+    subs_c, subs_f = extract_subgrids_multilevel(st.uc, st.uf, cfg)
+    pc = cfg.coarse_subgrid + 2 * cfg.ghost
+    pf = cfg.fine_subgrid + 2 * cfg.ghost
+    assert subs_c.shape == (cfg.n_subgrids_coarse, cfg.n_fields, pc, pc, pc)
+    assert subs_f.shape == (cfg.n_subgrids_fine, cfg.n_fields, pf, pf, pf)
+
+
+def test_constant_state_has_zero_rhs_on_both_levels():
+    """A spatially constant state must be an exact fixed point: the fine
+    ghost band (prolongated coarse) and the coarse overlap (restricted
+    fine) both reproduce the constant, so every flux difference is 0.0."""
+    cfg = CONFIG
+    const = jnp.array([1.0, 0.0, 0.0, 0.0, 2.5], jnp.float32)
+    uc = jnp.broadcast_to(const[:, None, None, None],
+                          (5, cfg.n_coarse, cfg.n_coarse, cfg.n_coarse))
+    uf = jnp.broadcast_to(const[:, None, None, None],
+                          (5, cfg.n_fine, cfg.n_fine, cfg.n_fine))
+    duc, duf = amr_reference_rhs(uc, uf, cfg)
+    np.testing.assert_array_equal(np.asarray(duc), 0.0)
+    np.testing.assert_array_equal(np.asarray(duf), 0.0)
+
+
+def test_sync_coarse_overwrites_covered_cells():
+    cfg = CONFIG
+    st = amr_sedov_init(cfg)
+    uc = sync_coarse(jnp.zeros_like(st.uc), st.uf, cfg)
+    o, c = cfg.offset, cfg.cover
+    np.testing.assert_array_equal(
+        np.asarray(uc[:, o:o + c, o:o + c, o:o + c]),
+        np.asarray(restrict_fine(st.uf, cfg.refine_ratio)))
+    outside = np.asarray(uc).copy()
+    outside[:, o:o + c, o:o + c, o:o + c] = 0.0
+    np.testing.assert_array_equal(outside, 0.0)
+
+
+def test_amr_config_validation():
+    with pytest.raises(ValueError):
+        AMRHydroConfig(cover=7)                     # cannot centre
+    with pytest.raises(ValueError):
+        AMRHydroConfig(coarse_grids_per_edge=1, coarse_subgrid=8,
+                       cover=8)                     # patch hits the boundary
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: every strategy == per-level fused reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,n_exec,max_agg", [
+    ("fused", 1, 1),
+    ("s2", 2, 1),
+    ("s3", 1, 16),
+    ("s2+s3", 4, 16),
+])
+def test_amr_strategy_bit_identical_to_reference(sedov_amr, strategy,
+                                                 n_exec, max_agg):
+    st, dt, (ref_c, ref_f) = sedov_amr
+    agg = AggregationConfig(strategy=strategy, n_executors=n_exec,
+                            max_aggregated=max_agg, launch_watermark=WM)
+    r = AMRStrategyRunner(CONFIG, agg)
+    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
+
+
+def test_amr_shared_shape_levels_share_one_family(sedov_amr):
+    """CONFIG: both levels use 8^3 sub-grids -> ONE TaskSignature region;
+    the same bucket-8 program launches coarse AND fine (h is traced)."""
+    st, dt, _ = sedov_amr
+    agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
+                            launch_watermark=WM)
+    r = AMRStrategyRunner(CONFIG, agg)
+    r.rk3_step(st.uc, st.uf, dt)
+    regions = r._agg_exec.stats["regions"]
+    assert len(regions) == 1
+    (hist,) = [v["aggregated_hist"] for v in regions.values()]
+    # 3 RK3 iterations x (1 coarse + 1 fine) launch, all through bucket 8
+    assert hist == {8: 6}
+    assert r.stats["kernel_launches"] == 6
+
+
+def test_amr_mixed_subgrids_two_families_one_executor():
+    """CONFIG_MIXED: 16^3 coarse + 8^3 fine sub-grids -> two families
+    aggregate concurrently through one executor, each with its own bucket
+    histogram, and results stay bit-identical to the reference."""
+    cfg = CONFIG_MIXED
+    st = amr_sedov_init(cfg)
+    dt = amr_courant_dt(st.uc, st.uf, cfg)
+    ref_c, ref_f = amr_reference_step(st.uc, st.uf, dt, cfg)
+    agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
+                            launch_watermark=WM)
+    r = AMRStrategyRunner(cfg, agg)
+    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
+    regions = r._agg_exec.stats["regions"]
+    assert len(regions) == 2
+    hists = {k: v["aggregated_hist"] for k, v in regions.items()}
+    assert hists["hydro_rhs_s16[5x22x22x22,scalar]"] == {1: 3}
+    assert hists["hydro_rhs_s8[5x14x14x14,scalar]"] == {8: 3}
+    by_family = r.pool.launches_by_family
+    assert by_family == {"hydro_rhs_s16": 3, "hydro_rhs_s8": 3}
+
+
+def test_amr_warmup_precompiles_both_families(sedov_amr):
+    st, dt, (ref_c, ref_f) = sedov_amr
+    agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
+                            launch_watermark=WM)
+    r = AMRStrategyRunner(CONFIG, agg)
+    r.warmup()
+    compiled = [v for region in r._agg_exec.regions.values()
+                for v in region.compiled.values()]
+    assert compiled and all(isinstance(f, jax.stages.Compiled)
+                            for f in compiled)
+    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
+
+
+def test_amr_run_stays_physical():
+    """Two Courant steps of the blast stay finite with positive density and
+    pressure proxy (E - KE) on both levels."""
+    cfg = CONFIG
+    st = amr_run(amr_sedov_init(cfg), cfg, n_steps=2)
+    for u in (st.uc, st.uf):
+        a = np.asarray(u)
+        assert np.all(np.isfinite(a))
+        assert np.all(a[0] > 0.0)                   # density
+        ke = 0.5 * (a[1] ** 2 + a[2] ** 2 + a[3] ** 2) / a[0]
+        # the unlimited high-order scheme may undershoot internal energy at
+        # the blast front (the flux solver floors pressure internally);
+        # require the undershoot to stay bounded relative to the peak
+        assert np.all(a[4] - ke > -1e-2 * np.max(a[4]))
+    assert st.t > 0.0 and st.step == 2

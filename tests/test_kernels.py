@@ -52,6 +52,28 @@ def test_hydro_rhs_kernel_shape_sweep(subgrid, ghost):
                                atol=2e-6 * max(scale, 1.0), rtol=2e-5)
 
 
+@pytest.mark.parametrize("layout", ["slot_grid", "slot_lane"])
+def test_hydro_rhs_kernel_traced_h(layout):
+    """Per-slot traced h: a mixed-width batch is bit-identical to the same
+    kernel run per width group, and allclose to the static-h program."""
+    u = _random_state(jax.random.PRNGKey(7), 8)
+    kw = dict(gamma=1.4, ghost=3, subgrid=8)
+    # widths ALTERNATE so every lane tile is width-heterogeneous (a kernel
+    # that collapsed h to one scalar per block would fail, not pass)
+    hs = jnp.where(jnp.arange(8) % 2 == 0, 0.02, 0.01).astype(u.dtype)
+    mixed = hydro_rhs_pallas(u, h_slots=hs, layout=layout, lane_tile=4, **kw)
+    for i in range(8):
+        one = hydro_rhs_pallas(u[i:i + 1], h_slots=hs[i:i + 1],
+                               layout=layout, lane_tile=1, **kw)
+        np.testing.assert_array_equal(np.asarray(mixed[i:i + 1]),
+                                      np.asarray(one))
+    static = hydro_rhs_pallas(u, h=0.01, layout=layout, lane_tile=4, **kw)
+    scale = float(jnp.max(jnp.abs(static)))
+    np.testing.assert_allclose(np.asarray(mixed[1::2]),
+                               np.asarray(static[1::2]),
+                               atol=2e-5 * max(scale, 1.0), rtol=2e-5)
+
+
 def test_hydro_split_kernels_match_fused():
     """Paper-faithful two-kernel structure == fused kernel == oracle."""
     u = _random_state(jax.random.PRNGKey(7), 4)

@@ -1,0 +1,269 @@
+"""Multi-region aggregation: TaskSignature routing, per-family bucketing,
+gather-mode AOT warmup, coalesced ring writes, and stats consistency.
+
+The PR's invariants (DESIGN.md §7):
+* submissions route to their signature's region — families with different
+  kernels or shapes keep separate rings/queues/compiled buckets and NEVER
+  flush each other;
+* interleaved submissions of two families launch with each family's exact
+  greedy bucket decomposition;
+* one registered body is shape-polymorphic (new shapes open new regions);
+* ``warmup(parent_shapes=...)`` AOT-compiles the indexed-gather and
+  contiguous-prefix programs (closing the DESIGN.md §6 gap);
+* SlotRing coalesces k pending slot writes into one donated scatter;
+* every HydroStrategyRunner strategy reports per-call stat deltas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AggregationConfig, HydroConfig
+from repro.core import (
+    AggregationExecutor, HydroStrategyRunner, SlotRing, TaskSignature,
+    gather_futures,
+)
+from repro.hydro.state import sedov_init
+from repro.hydro.stepper import courant_dt
+
+CFG = HydroConfig(subgrid=8, ghost=3, levels=1)
+
+
+def _affine(x):
+    return 2.0 * x + 1.0
+
+
+def _square(x):
+    return x * x + 3.0
+
+
+def _greedy_launches(q: int, buckets) -> int:
+    n = 0
+    while q:
+        b = max(x for x in buckets if x <= q)
+        q -= b
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# TaskSignature
+# ---------------------------------------------------------------------------
+
+def test_task_signature_keys_kernel_and_shapes():
+    a = TaskSignature.from_args("k", (jnp.zeros((2, 3)), 1.0))
+    b = TaskSignature.from_args("k", (jnp.zeros((2, 3)), 2.0))
+    c = TaskSignature.from_args("k", (jnp.zeros((3, 2)), 1.0))
+    d = TaskSignature.from_args("other", (jnp.zeros((2, 3)), 1.0))
+    assert a == b                  # values don't matter, shapes/dtypes do
+    assert a != c and a != d
+    assert "k[2x3,scalar]" == a.describe()
+
+
+def test_same_shape_different_dtype_regions_keep_separate_stats():
+    """Same shape, different dtype -> distinct regions AND distinct
+    stats["regions"] keys (the describe() key renders non-f32 dtypes)."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg, name="a")
+    exe.submit(jnp.zeros((2,), jnp.float32))
+    exe.submit(jnp.zeros((2,), jnp.int32))
+    exe.flush()
+    assert len(exe.regions) == 2
+    assert len(exe.stats["regions"]) == 2
+    assert sum(v["submitted"] for v in exe.stats["regions"].values()) == 2
+
+
+def test_task_signature_slotview_uses_per_slot_shape():
+    from repro.core import SlotView
+    parent = jnp.zeros((10, 4, 4))
+    sig = TaskSignature.from_args("k", (SlotView(parent, 3),))
+    assert sig.arg_specs[0][0] == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# mixed-signature bucketing
+# ---------------------------------------------------------------------------
+
+def test_interleaved_families_launch_counts_pinned():
+    """Two kernels with different shapes interleave submissions; each family
+    drains with ITS OWN greedy bucket decomposition — no cross-family
+    flushing, no shared buckets."""
+    cfg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg, name="affine")
+    exe.register("square", jax.vmap(_square))
+    futs_a, futs_b = [], []
+    for i in range(7):
+        futs_a.append(exe.submit(jnp.full((2,), float(i))))
+        if i < 5:
+            futs_b.append(exe.submit(jnp.full((3, 4), float(i)),
+                                     kernel="square"))
+    exe.flush()
+    buckets = cfg.bucket_sizes()
+    want_a = _greedy_launches(7, buckets)           # 4+2+1 -> 3
+    want_b = _greedy_launches(5, buckets)           # 4+1   -> 2
+    assert exe.stats["launches"] == want_a + want_b
+    regions = exe.stats["regions"]
+    assert set(regions) == {"affine[2]", "square[3x4]"}
+    assert regions["affine[2]"]["launches"] == want_a
+    assert regions["square[3x4]"]["launches"] == want_b
+    assert sum(k * v for k, v in
+               regions["affine[2]"]["aggregated_hist"].items()) == 7
+    assert sum(k * v for k, v in
+               regions["square[3x4]"]["aggregated_hist"].items()) == 5
+    assert exe.pool.launches_by_family == {"affine": want_a,
+                                           "square": want_b}
+    for i, f in enumerate(futs_a):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full(2, 2.0 * i + 1.0))
+    for i, f in enumerate(futs_b):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full((3, 4), i * i + 3.0))
+
+
+def test_one_body_is_shape_polymorphic():
+    """A single registered body serves several task shapes — each opens its
+    own region (ring + buckets) lazily."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    f2 = [exe.submit(jnp.full((2,), float(i))) for i in range(3)]
+    f5 = [exe.submit(jnp.full((5,), float(i))) for i in range(4)]
+    exe.flush()
+    assert len(exe.regions) == 2
+    for i, f in enumerate(f2):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full(2, 2.0 * i + 1.0))
+    for i, f in enumerate(f5):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full(5, 2.0 * i + 1.0))
+
+
+def test_register_conflicting_body_raises():
+    exe = AggregationExecutor(jax.vmap(_affine), AggregationConfig(),
+                              name="a")
+    with pytest.raises(ValueError):
+        exe.register("a", jax.vmap(_square))
+
+
+def test_unknown_kernel_raises():
+    exe = AggregationExecutor(jax.vmap(_affine), AggregationConfig())
+    with pytest.raises(KeyError):
+        exe.submit(jnp.zeros((2,)), kernel="nope")
+
+
+def test_gather_futures_mixed_output_shapes_raises():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    fa = exe.submit(jnp.zeros((2,)))
+    fb = exe.submit(jnp.zeros((5,)))
+    exe.flush()
+    with pytest.raises(ValueError):
+        gather_futures([fa, fb])
+
+
+# ---------------------------------------------------------------------------
+# gather-mode AOT warmup (DESIGN.md §6 -> §7)
+# ---------------------------------------------------------------------------
+
+def test_warmup_parent_shapes_precompiles_gather_and_prefix():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(24.0).reshape(8, 3)
+    exe.warmup(parent_shapes=(parent,))
+    pk = ((8, 3),)
+    for b in cfg.bucket_sizes():
+        assert isinstance(exe._compiled[("gather", b, pk)],
+                          jax.stages.Compiled)
+        assert isinstance(exe._compiled[("prefix_aot", b, pk)],
+                          jax.stages.Compiled)
+    # contiguous run -> prefix_aot; shuffled run -> gather: both must hit
+    # the AOT programs and produce exact results
+    futs = [exe.submit_indexed((parent,), i) for i in range(8)]
+    exe.flush()
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.asarray(2.0 * parent[i] + 1.0))
+    order = [3, 0, 6, 1]
+    futs = [exe.submit_indexed((parent,), i) for i in order]
+    exe.flush()
+    for i, f in zip(order, futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.asarray(2.0 * parent[i] + 1.0))
+
+
+def test_warmup_requires_some_shape_source():
+    exe = AggregationExecutor(jax.vmap(_affine), AggregationConfig())
+    with pytest.raises(ValueError):
+        exe.warmup()
+
+
+# ---------------------------------------------------------------------------
+# coalesced slot-ring writes
+# ---------------------------------------------------------------------------
+
+def test_slot_ring_coalesces_pending_writes():
+    ring = SlotRing(8, (jnp.zeros((3,)),))
+    for i in range(5):
+        assert ring.write((jnp.full((3,), float(i)),)) == i
+    assert ring.writes == 5 and ring.commits == 0     # nothing dispatched yet
+    buf = ring.buffers()[0]                           # ONE donated scatter
+    assert ring.commits == 1
+    np.testing.assert_array_equal(
+        np.asarray(buf[:5]),
+        np.stack([np.full(3, float(i)) for i in range(5)]))
+    ring.write((jnp.full((3,), 9.0),))
+    np.testing.assert_array_equal(np.asarray(ring.buffers()[0][5]),
+                                  np.full(3, 9.0))
+    assert ring.commits == 2
+
+
+def test_executor_ring_writes_one_scatter_per_launch():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=10**9)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    futs = [exe.submit(jnp.full((3,), float(i))) for i in range(6)]
+    ring = exe.ring
+    assert ring.writes == 6 and ring.commits == 0
+    exe.flush()
+    # 6 tasks drain as buckets 4+2 -> 2 launches but the FIRST commit
+    # materialized all 6 pending slots in one scatter
+    assert ring.commits == 1
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      np.full(3, 2.0 * i + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# per-call stats deltas (all strategies consistent)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sedov():
+    st = sedov_init(CFG)
+    dt = courant_dt(st.u, CFG)
+    return st, dt
+
+
+@pytest.mark.parametrize("strategy,n_exec,max_agg,per_call", [
+    ("fused", 1, 1, 1),
+    ("s2", 2, 1, CFG.n_subgrids),
+    ("s3", 1, CFG.n_subgrids, 1),
+    ("s2+s3", 2, CFG.n_subgrids, 1),
+])
+def test_stats_deltas_accumulate_per_call(sedov, strategy, n_exec, max_agg,
+                                          per_call):
+    """Every strategy reports kernel_launches as accumulated per-call deltas
+    (s3 used to OVERWRITE with the executor's cumulative counter)."""
+    st, dt = sedov
+    r = HydroStrategyRunner(CFG, AggregationConfig(
+        strategy=strategy, n_executors=n_exec, max_aggregated=max_agg,
+        launch_watermark=10**9))
+    r.rhs(st.u)
+    assert r.stats["kernel_launches"] == per_call
+    r.rhs(st.u)
+    assert r.stats["kernel_launches"] == 2 * per_call
+    assert r.stats["iterations"] == 2
