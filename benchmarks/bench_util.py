@@ -1,0 +1,30 @@
+"""Shared helpers for the strategy-sweep benchmarks.
+
+The aggregation executor's counters are cumulative and include the warm
+(compile) step, while the benchmark rows report per-timed-step values —
+these helpers snapshot/diff the per-family bucket histograms so every
+sweep's JSON stays internally consistent.
+"""
+from __future__ import annotations
+
+# launch watermark that never fires: sweeps pin the greedy bucket drain so
+# launch counts measure aggregation policy, not idle-detection timing
+WM = 10 ** 9
+
+
+def region_hists(runner) -> dict:
+    """Per-family bucket histograms of a runner's aggregation executor
+    (empty when the strategy runs without one)."""
+    if runner.executor is None:
+        return {}
+    return {k: dict(v["aggregated_hist"])
+            for k, v in runner.executor.stats["regions"].items()}
+
+
+def hist_deltas(now: dict, warm: dict) -> dict:
+    """Per-family bucket histograms over the timed region only."""
+    out = {}
+    for fam, hist in now.items():
+        d = {b: c - warm.get(fam, {}).get(b, 0) for b, c in hist.items()}
+        out[fam] = {b: c for b, c in d.items() if c}
+    return out

@@ -1,0 +1,72 @@
+"""BENCH artifact schema sanity check (the CI gate against artifact drift).
+
+Every ``BENCH_*.json`` at the repo root must carry the expected top-level
+keys (benchmark id, backend, config, sweep parameters, per-strategy rows)
+and every row must carry a config tag plus the launch/timing counters the
+analysis notebooks key on.  A benchmark that silently changes its payload
+shape fails the build here instead of producing unreadable artifacts.
+
+  PYTHONPATH=src python benchmarks/check_bench_schema.py [paths...]
+
+With no arguments, checks all BENCH_*.json at the repo root (and fails if
+there are none).  Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+
+TOP_KEYS = ("benchmark", "backend", "config", "steps", "repeats", "rows")
+ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
+
+
+def check_file(path: str) -> List[str]:
+    problems = []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(payload, dict):
+        return [f"{path}: top level must be an object"]
+    for key in TOP_KEYS:
+        if key not in payload:
+            problems.append(f"{path}: missing top-level key {key!r}")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        problems.append(f"{path}: 'rows' must be a non-empty list")
+        return problems
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            problems.append(f"{path}: rows[{i}] must be an object")
+            continue
+        for key in ROW_KEYS:
+            if key not in row:
+                problems.append(f"{path}: rows[{i}] missing {key!r}")
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        print("check_bench_schema: no BENCH_*.json artifacts found",
+              file=sys.stderr)
+        return 1
+    problems: List[str] = []
+    for path in paths:
+        problems.extend(check_file(path))
+    for p in problems:
+        print(f"check_bench_schema: {p}", file=sys.stderr)
+    if not problems:
+        print(f"check_bench_schema: {len(paths)} artifact(s) OK "
+              f"({', '.join(os.path.basename(p) for p in paths)})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,18 +1,19 @@
-"""Two-level AMR Sedov strategy sweep: the multi-region aggregation runtime
-on a genuinely adaptive task population.
+"""Cross-solver aggregation benchmark: hydro + gravity through one executor.
 
-For each strategy, measures per RK3 time-step on the two-level refined
-Sedov scenario:
+For each strategy, measures per RK3 time-step on the self-gravitating
+Sedov scenario — every iteration submits the hydro Reconstruct+Flux tasks
+AND the per-sub-grid gravity solves interleaved into ONE
+``AggregationExecutor`` (two concurrent ``TaskSignature`` families):
 
 * wall time per step,
 * kernel launches per step (the aggregation win),
-* per-family bucket histograms (``--mixed`` drives TWO TaskSignature
-  families — 16^3 coarse + 8^3 fine sub-grids — through one executor).
+* per-family bucket histograms and per-family launch counts (the
+  multi-region observability surface).
 
-  PYTHONPATH=src python benchmarks/amr_sedov.py [--mixed] [--smoke]
-                                                [--steps N] [--repeats N]
+  PYTHONPATH=src python benchmarks/gravity.py [--smoke] [--steps N]
+                                              [--repeats N]
 
-Writes BENCH_amr_sedov.json at the repo root.
+Writes BENCH_gravity.json at the repo root.
 """
 from __future__ import annotations
 
@@ -24,57 +25,58 @@ from typing import List
 import jax
 from bench_util import WM, hist_deltas, region_hists
 
-from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
 from repro.configs.base import AggregationConfig
-from repro.core import AMRSedovScenario, StrategyRunner
-from repro.hydro.state import amr_sedov_init
-from repro.hydro.stepper import amr_courant_dt
+from repro.configs.gravity import CONFIG, CONFIG_SMALL
+from repro.core import GravityScenario, StrategyRunner
+from repro.hydro.state import sedov_init
+from repro.hydro.stepper import courant_dt
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
-                        "BENCH_amr_sedov.json")
+                        "BENCH_gravity.json")
 
 
 def run(cfg, steps: int, repeats: int) -> List[dict]:
-    st = amr_sedov_init(cfg)
-    dt = amr_courant_dt(st.uc, st.uf, cfg)
+    st = sedov_init(cfg.hydro)
+    dt = courant_dt(st.u, cfg.hydro)
     rows = []
     for tag, strat, n_exec, max_agg in [
         ("s2", "s2", 4, 1),
         ("s3", "s3", 1, 16),
         ("s2s3", "s2+s3", 4, 16),
-        ("fused_per_level", "fused", 1, 1),
+        ("fused_per_family", "fused", 1, 1),
     ]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg, launch_watermark=WM)
-        r = StrategyRunner(AMRSedovScenario(cfg), agg)
+        r = StrategyRunner(GravityScenario(cfg), agg)
         r.warmup()                           # AOT gather/prefix buckets
-        state = (st.uc, st.uf)
-        r.rk3_step(state, dt)                # compile remaining programs
+        r.rk3_step(st.u, dt)                 # compile remaining programs
         r.stats["kernel_launches"] = 0
+        warm_fams = dict(r.launches_by_family)
         warm_hists = region_hists(r)
         best = float("inf")
         for _ in range(repeats):
-            best = min(best, r.time_step(state, dt, steps))
+            best = min(best, r.time_step(st.u, dt, steps))
         launches = r.stats["kernel_launches"] / (steps * repeats)
+        by_family = {k: (v - warm_fams.get(k, 0)) / (steps * repeats)
+                     for k, v in r.launches_by_family.items()}
         regions = hist_deltas(region_hists(r), warm_hists)
         rows.append({
             "config": tag,
             "ms_per_step": round(best * 1e3, 3),
             "launches_per_step": launches,
+            "launches_by_family_per_step": by_family,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,
         })
-        print(f"  {tag:16s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
+        print(f"  {tag:18s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
               f"launches/step {launches:.0f}  families {regions or '-'}")
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mixed", action="store_true",
-                    help="mixed sub-grid sizes: two TaskSignature families")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI tier-1 smoke: 1 step, 1 repeat")
+                    help="CI tier-1 smoke: small grid, 1 step, 1 repeat")
     ap.add_argument("--steps", type=int, default=2)
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
@@ -82,12 +84,14 @@ def main() -> None:
         args.steps, args.repeats = 1, 1
     if args.steps < 1 or args.repeats < 1:
         ap.error("--steps and --repeats must be >= 1")
-    cfg = CONFIG_MIXED if args.mixed else CONFIG
-    print(f"amr_sedov: {cfg.name}, coarse {cfg.n_coarse}^3 "
-          f"(+{cfg.n_fine}^3 fine patch), backend={jax.default_backend()}")
+    cfg = CONFIG_SMALL if args.smoke else CONFIG
+    hc = cfg.hydro
+    print(f"gravity: {cfg.name}, {hc.n_subgrids} sub-grids of "
+          f"{hc.subgrid}^3, 2 kernel families/iteration, "
+          f"backend={jax.default_backend()}")
     rows = run(cfg, args.steps, args.repeats)
     payload = {
-        "benchmark": "amr_sedov",
+        "benchmark": "gravity",
         "backend": jax.default_backend(),
         "config": cfg.name,
         "steps": args.steps,

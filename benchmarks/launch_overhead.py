@@ -30,10 +30,11 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+from bench_util import WM
 
 from repro.configs.base import AggregationConfig, HydroConfig
+from repro.core import StrategyRunner, UniformSedovScenario
 from repro.core.executor import ExecutorPool
-from repro.core.strategies import HydroStrategyRunner
 from repro.hydro.state import assemble_global, extract_subgrids, sedov_init
 from repro.hydro.stepper import courant_dt
 
@@ -49,8 +50,7 @@ class SeedS2Runner:
 
     def __init__(self, cfg: HydroConfig, n_executors: int = 1):
         self.cfg = cfg
-        ref = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
-        self._jit_batched = ref._jit_batched
+        self._jit_batched = UniformSedovScenario(cfg).jitted_body("hydro_rhs")
         self.pool = ExecutorPool(n_executors)
         self.staging_s = 0.0
         self.launches = 0
@@ -89,12 +89,11 @@ class SeedS3Runner:
                  watermark: int = 1):
         from repro.core.aggregation import AggregationExecutor
         self.cfg = cfg
-        ref = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
         agg = AggregationConfig(strategy="s3", n_executors=n_executors,
                                 max_aggregated=max_agg, staging="host",
                                 launch_watermark=watermark)
-        self.exe = AggregationExecutor(ref.batched_body, agg,
-                                       name="seed_s3")
+        self.exe = AggregationExecutor(UniformSedovScenario(cfg).batched_body,
+                                       agg, name="seed_s3")
         self.staging_s = 0.0
 
     def rhs(self, u):
@@ -167,7 +166,6 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     # launches depend on busy-detection timing, which staging cost itself
     # perturbs (the comparison would otherwise measure emergent launch
     # policy, not staging)
-    WM = 10 ** 9
     for tag, n_exec in [("s3_seed_hoststage", 1),
                         ("s2s3_seed_hoststage", 4)]:
         seed3 = SeedS3Runner(cfg, n_executors=n_exec, max_agg=16,
@@ -193,25 +191,26 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg, staging="device",
                                 launch_watermark=wm)
-        r = HydroStrategyRunner(cfg, agg)
+        r = StrategyRunner(UniformSedovScenario(cfg), agg)
         r.rk3_step(st.u, dt)                      # warmup/compile
         r.stats["staging_s"] = 0.0
-        if r._agg_exec is not None:
-            r._agg_exec.stats["staging_s"] = 0.0
-            r._agg_exec.stats["launches"] = 0
+        if r.executor is not None:
+            r.executor.stats["staging_s"] = 0.0
+            r.executor.stats["launches"] = 0
         for e in r.pool.executors:
             e.dispatch_s = 0.0
         sec = _time_runner(r.rk3_step, st.u, dt, steps, repeats)
-        staging_s = (r._agg_exec.stats["staging_s"]
-                     if r._agg_exec is not None else 0.0)
+        staging_s = (r.executor.stats["staging_s"]
+                     if r.executor is not None else 0.0)
         launches = (3 * n if strat == "s2"
                     else 3 if strat == "fused"
-                    else r._agg_exec.stats["launches"] // (steps * repeats))
+                    else r.executor.stats["launches"] // (steps * repeats))
         record(tag, sec, launches, staging_s / repeats,
                r.pool.total_dispatch_s / repeats)
 
     # -- scan trajectory: whole multi-step RK3 as one program -------------
-    r = HydroStrategyRunner(cfg, AggregationConfig(strategy="fused"))
+    r = StrategyRunner(UniformSedovScenario(cfg),
+                       AggregationConfig(strategy="fused"))
     r.rk3_trajectory(st.u, dt, steps)             # warmup/compile
     best = float("inf")
     for _ in range(repeats):
@@ -246,6 +245,7 @@ def main() -> None:
     payload = {
         "benchmark": "launch_overhead",
         "backend": jax.default_backend(),
+        "config": "sedov",
         "levels": levels,
         "steps": args.steps,
         "repeats": args.repeats,

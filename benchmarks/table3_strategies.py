@@ -22,7 +22,7 @@ from typing import List
 import jax
 
 from repro.configs.base import AggregationConfig, HydroConfig
-from repro.core.strategies import HydroStrategyRunner
+from repro.core import StrategyRunner, UniformSedovScenario
 from repro.hydro.state import sedov_init
 from repro.hydro.stepper import courant_dt
 
@@ -59,7 +59,7 @@ def sweep(levels: int = 2, steps: int = 2, quick: bool = False):
         dt = courant_dt(st.u, cfg)
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg)
-        runner = HydroStrategyRunner(cfg, agg)
+        runner = StrategyRunner(UniformSedovScenario(cfg), agg)
         use_scan = tag == "fused_scan_bound"
         if use_scan:
             runner.rk3_trajectory(st.u, dt, steps)  # warmup/compile

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
 from repro.configs.base import AggregationConfig
-from repro.core import AMRStrategyRunner
+from repro.core import AMRSedovScenario, StrategyRunner
 from repro.hydro.state import amr_sedov_init
 from repro.hydro.stepper import amr_courant_dt, amr_reference_step
 
@@ -45,16 +45,16 @@ def main():
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg,
                                 launch_watermark=10 ** 9)
-        r = AMRStrategyRunner(cfg, agg)
+        r = StrategyRunner(AMRSedovScenario(cfg), agg)
         uc, uf = st.uc, st.uf
         for _ in range(args.steps):
-            uc, uf = r.rk3_step(uc, uf, dt)
+            uc, uf = r.rk3_step((uc, uf), dt)
         ok = (np.array_equal(np.asarray(uc), np.asarray(ref_c))
               and np.array_equal(np.asarray(uf), np.asarray(ref_f)))
         fams = ""
-        if r._agg_exec is not None:
+        if r.executor is not None:
             hists = {k: v["aggregated_hist"]
-                     for k, v in r._agg_exec.stats["regions"].items()}
+                     for k, v in r.executor.stats["regions"].items()}
             fams = f"  families={hists}"
         print(f"  {strat:6s} launches={r.stats['kernel_launches']:4d}  "
               f"bit-identical={ok}{fams}")

@@ -13,7 +13,7 @@ import time
 import jax.numpy as jnp
 
 from repro.configs.base import AggregationConfig, HydroConfig
-from repro.core.strategies import HydroStrategyRunner
+from repro.core import StrategyRunner, UniformSedovScenario
 from repro.hydro.state import sedov_init
 from repro.hydro.stepper import courant_dt, shock_radius, total_conserved
 
@@ -41,7 +41,7 @@ def main():
     st = sedov_init(cfg)
     h = cfg.domain / st.u.shape[-1]
     c0 = total_conserved(st.u, h)
-    runner = HydroStrategyRunner(cfg, agg)
+    runner = StrategyRunner(UniformSedovScenario(cfg), agg)
 
     u, t = st.u, 0.0
     for step in range(args.steps):

@@ -302,9 +302,24 @@ class AMRHydroConfig:
         return self.fine_grids_per_edge ** 3
 
 
+@dataclass(frozen=True)
+class GravityHydroConfig:
+    """Self-gravitating Sedov scenario: every iteration submits TWO kernel
+    families — the hydro Reconstruct+Flux tasks and a per-sub-grid gravity
+    solve (``repro.kernels.gravity``) — interleaved through one
+    ``AggregationExecutor``, the cross-solver aggregation Octo-Tiger's
+    runtime performs with its hydro and FMM kernels.
+    """
+    name: str = "gravity_sedov"
+    hydro: HydroConfig = field(default_factory=HydroConfig)
+    g_const: float = 1.0              # gravitational constant (scaled units)
+    relax_iters: int = 8              # Jacobi sweeps per gravity task
+
+
 __all__ = [
     "ModelConfig", "ShapeConfig", "ParallelConfig", "AggregationConfig",
-    "HydroConfig", "AMRHydroConfig", "ALL_SHAPES", "SHAPES_BY_NAME",
+    "HydroConfig", "AMRHydroConfig", "GravityHydroConfig",
+    "ALL_SHAPES", "SHAPES_BY_NAME",
     "shape_applicable",
     "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
 ]

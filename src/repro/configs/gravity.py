@@ -1,0 +1,22 @@
+"""Self-gravitating Sedov blast (the cross-solver aggregation workload).
+
+Two instances:
+
+* ``CONFIG``       — 64 sub-grids of 8^3 (levels=2): the benchmark size.
+* ``CONFIG_SMALL`` — 8 sub-grids of 8^3 (levels=1): CI/test size, where the
+  greedy drain puts each family's whole iteration into one bucket-8 launch
+  (making bit-exactness against the per-family fused reference directly
+  assertable).
+
+Both submit hydro ("hydro_rhs") and gravity ("gravity") tasks interleaved
+into ONE ``AggregationExecutor`` per iteration — two ``TaskSignature``
+families aggregating concurrently, per DESIGN.md §8.
+"""
+from repro.configs.base import GravityHydroConfig, HydroConfig
+
+CONFIG = GravityHydroConfig(hydro=HydroConfig(name="sedov", subgrid=8,
+                                              ghost=3, levels=2))
+
+CONFIG_SMALL = GravityHydroConfig(
+    name="gravity_sedov_small",
+    hydro=HydroConfig(name="sedov", subgrid=8, ghost=3, levels=1))

@@ -4,8 +4,14 @@
 * ``buffers``     — recycled staging slabs (CPPuddle allocator analogue)
 * ``aggregation`` — the on-the-fly explicit work-aggregation executor (S3),
                     a multi-region runtime keyed by ``TaskSignature``
-* ``strategies``  — S1/S2/S3/fused strategy runners over the hydro tasks,
-                    uniform-grid and two-level AMR
+* ``scenario``    — the Scenario plugin protocol: declarative workloads
+                    (uniform Sedov, two-level AMR, hydro+gravity) exposing
+                    kernel families, task populations and fused references
+* ``strategies``  — the Strategy plugin registry (s2 / s3 / s2+s3 / fused)
+                    and the single ``StrategyRunner`` facade that drives
+                    any scenario under any strategy — including
+                    cross-solver aggregation of several kernel families
+                    through one executor
 """
 from repro.core.aggregation import (
     AggregationExecutor, SlotView, TaskFuture, TaskSignature,
@@ -13,13 +19,22 @@ from repro.core.aggregation import (
 )
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
+from repro.core.scenario import (
+    AMRSedovScenario, GravityScenario, KernelFamily, Scenario,
+    TaskPopulation, UniformSedovScenario, xla_task_body,
+)
 from repro.core.strategies import (
-    AMRStrategyRunner, HydroStrategyRunner, xla_task_body,
+    AMRStrategyRunner, HydroStrategyRunner, RunContext, Strategy,
+    StrategyRunner, available_strategies, register_strategy,
 )
 
 __all__ = [
     "AggregationExecutor", "SlotView", "TaskFuture", "TaskSignature",
     "aggregation_region", "gather_futures", "reset_regions",
     "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
+    "Scenario", "KernelFamily", "TaskPopulation",
+    "UniformSedovScenario", "AMRSedovScenario", "GravityScenario",
+    "Strategy", "RunContext", "StrategyRunner",
+    "available_strategies", "register_strategy",
     "AMRStrategyRunner", "HydroStrategyRunner", "xla_task_body",
 ]

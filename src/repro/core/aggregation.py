@@ -46,7 +46,8 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from types import MappingProxyType
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,12 +132,14 @@ def gather_futures(futs: Sequence[TaskFuture]) -> Any:
                 lambda x: jnp.take(x, idx, axis=0), batch))
     if len(parts) == 1:
         return parts[0]
-    task_shapes = {tuple(jax.tree_util.tree_leaves(p)[0].shape[1:])
-                   for p in parts}
-    if len(task_shapes) > 1:
+    task_specs = {tuple((tuple(x.shape[1:]), np.dtype(x.dtype).str)
+                        for x in jax.tree_util.tree_leaves(p))
+                  for p in parts}
+    if len(task_specs) > 1:
         raise ValueError(
-            f"futures span task families with different output shapes "
-            f"{sorted(task_shapes)} — gather each family separately")
+            f"futures span task families with different output "
+            f"shapes/dtypes {sorted(task_specs)} — gather each family "
+            f"separately")
     return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
@@ -304,11 +307,12 @@ class AggregationExecutor:
         self._bodies: Dict[str, Callable] = {}
         self._regions: Dict[TaskSignature, _Region] = {}
         self._default_kernel: Optional[str] = None
-        # one-entry routing cache for SlotView waves: (kernel, parents, sig).
-        # A wave's submissions share one parent set, so identity-comparing
-        # the parents skips the per-task signature rebuild on the hot path.
-        self._sig_cache: Optional[Tuple[str, Tuple[Any, ...],
-                                        TaskSignature]] = None
+        # per-kernel routing cache for SlotView waves: kernel -> (parents,
+        # sig).  A wave's submissions share one parent set per family, so
+        # identity-comparing the parents skips the per-task signature
+        # rebuild on the hot path — keyed per kernel so interleaved
+        # multi-family waves (e.g. hydro + gravity) don't thrash it.
+        self._sig_cache: Dict[str, Tuple[Tuple[Any, ...], TaskSignature]] = {}
         # statistics for the benchmark tables; per-family bucket histograms
         # live under "regions" (the multi-signature observability surface)
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
@@ -348,14 +352,14 @@ class AggregationExecutor:
         """Region routing for all-SlotView submissions, cached on the
         parent-set identity (strong refs keep ids valid)."""
         parents = tuple(v.parent for v in views)
-        c = self._sig_cache
-        if (c is not None and c[0] == kernel and len(c[1]) == len(parents)
-                and all(a is b for a, b in zip(c[1], parents))):
-            region = self._regions.get(c[2])
+        c = self._sig_cache.get(kernel)
+        if (c is not None and len(c[0]) == len(parents)
+                and all(a is b for a, b in zip(c[0], parents))):
+            region = self._regions.get(c[1])
             if region is not None:
                 return region
         region = self._region_for(kernel, views)
-        self._sig_cache = (kernel, parents, region.signature)
+        self._sig_cache[kernel] = (parents, region.signature)
         return region
 
     def _resolve_kernel(self, kernel: Optional[str]) -> str:
@@ -389,14 +393,17 @@ class AggregationExecutor:
         return out
 
     @property
-    def _compiled(self) -> Dict[Tuple, Callable]:
+    def _compiled(self) -> Mapping[Tuple, Callable]:
+        """Read-only view of the compiled-program caches (merged across
+        regions); write through ``region.compiled`` instead — a write to
+        this view would silently vanish in the multi-region case."""
         region = self._sole_region()
         if region is not None:
-            return region.compiled
+            return MappingProxyType(region.compiled)
         merged: Dict[Tuple, Callable] = {}
         for region in self._regions.values():
             merged.update(region.compiled)
-        return merged
+        return MappingProxyType(merged)
 
     # -- warmup ------------------------------------------------------------
     def warmup(self, example_args: Optional[Tuple[Any, ...]] = None, *,
@@ -621,7 +628,7 @@ class AggregationExecutor:
         self.pool.drain()
         # the routing cache holds strong refs to the last wave's parent
         # arrays; the wave is over, release them (next wave re-primes)
-        self._sig_cache = None
+        self._sig_cache.clear()
 
     def map(self, task_args: Sequence[Tuple[Any, ...]],
             kernel: Optional[str] = None) -> List[Any]:

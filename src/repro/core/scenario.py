@@ -1,0 +1,327 @@
+"""Scenario protocol: declarative workload descriptions for StrategyRunner.
+
+The execution API splits WHAT from HOW (DESIGN.md §8):
+
+* a **Scenario** (this module) declares WHAT one solver iteration computes —
+  its kernel families (id + batched body), the per-iteration task
+  populations (parent arrays with a leading task axis, per-task traced
+  args), the exchange/assembly steps around them, and the bit-exact fused
+  reference every strategy must reproduce;
+* a **Strategy** (``repro.core.strategies``) decides HOW those populations
+  launch (per-task scatter ring, explicit aggregation, whole-graph fusion).
+
+Adding a workload is one Scenario subclass; it immediately runs under every
+registered strategy, and its families aggregate alongside any other
+family submitted to the same ``AggregationExecutor``.  Implementations:
+
+* ``UniformSedovScenario`` — the paper's Table II/III workload (one family);
+* ``AMRSedovScenario``     — two-level refined Sedov (one or two hydro
+  families, per-level traced ``h``);
+* ``GravityScenario``      — hydro + per-sub-grid gravity solve: TWO kernel
+  families (``hydro_rhs`` + ``gravity``) submitted interleaved through ONE
+  executor per iteration, the cross-solver aggregation Octo-Tiger performs
+  with its hydro and FMM kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    AMRHydroConfig, GravityHydroConfig, HydroConfig,
+)
+from repro.hydro.state import (
+    assemble_global, extract_subgrids, extract_subgrids_multilevel,
+    sync_coarse,
+)
+from repro.hydro.stepper import (
+    level_batched_body, level_batched_jit, subgrid_rhs,
+)
+from repro.kernels.gravity import gravity_batched_body, gravity_batched_jit
+
+
+def xla_task_body(cfg: HydroConfig, h: float) -> Callable:
+    """The fine-grained hydro task body: (F, P, P, P) -> (F, S, S, S)."""
+    return partial(subgrid_rhs, h=h, gamma=cfg.gamma,
+                   ghost=cfg.ghost, subgrid=cfg.subgrid)
+
+
+@dataclass(frozen=True)
+class KernelFamily:
+    """One aggregable kernel family: the ``TaskSignature`` kernel id, its
+    batched body ``(*stacked_args) -> stacked_out`` (leading slot axis on
+    every arg/out), and optionally a pre-jitted twin (so scenario,
+    reference and fused strategy share ONE compiled program)."""
+
+    kernel: str
+    batched_body: Callable
+    jit_body: Optional[Callable] = None
+
+
+@dataclass(frozen=True)
+class TaskPopulation:
+    """One iteration's submission wave for one family: per-task parent
+    arrays (leading task axis; per-task traced args like the cell width
+    ride along as 1-D parents).  Task ``i`` consumes ``parents[j][i]``."""
+
+    kernel: str
+    parents: Tuple[jax.Array, ...]
+
+    @property
+    def n_tasks(self) -> int:
+        return self.parents[0].shape[0]
+
+
+class Scenario:
+    """Base class / protocol.  Subclasses implement:
+
+    * ``families()``            — static kernel-family declarations;
+    * ``populations(state)``    — ghost exchange + decomposition: one
+      ``TaskPopulation`` per family, ready to submit;
+    * ``assemble(state, outs)`` — per-population batched outputs (population
+      order) -> ``d(state)/dt`` with the state's pytree structure;
+    * ``warmup_parent_specs()`` — (kernel, parent ShapeDtypeStructs) pairs
+      describing the submission waves, for AOT bucket warmup;
+
+    and may override ``finalize_step`` (post-RK3 hook, e.g. the AMR
+    coarse-fine sync).  ``reference_rhs`` — ONE jitted launch per family
+    through the same assemble path — is the bit-exact oracle every
+    strategy must match; it is shared code, not per-scenario, so
+    runner-vs-reference equivalence reduces to per-family kernel
+    equivalence (the aggregation substrate's invariant).
+    """
+
+    name: str = "scenario"
+
+    # -- required ----------------------------------------------------------
+    def families(self) -> Tuple[KernelFamily, ...]:
+        raise NotImplementedError
+
+    def populations(self, state) -> Tuple[TaskPopulation, ...]:
+        raise NotImplementedError
+
+    def assemble(self, state, outs: Sequence[Any]):
+        raise NotImplementedError
+
+    def warmup_parent_specs(self) -> Tuple[Tuple[str, Tuple[Any, ...]], ...]:
+        return ()
+
+    # -- provided ----------------------------------------------------------
+    def finalize_step(self, state):
+        """Post-RK3-combine hook; identity unless levels need re-syncing."""
+        return state
+
+    def family(self, kernel: str) -> KernelFamily:
+        cache = getattr(self, "_family_by_kernel", None)
+        if cache is None:
+            cache = {f.kernel: f for f in self.families()}
+            self._family_by_kernel = cache
+        return cache[kernel]
+
+    def jitted_body(self, kernel: str) -> Callable:
+        """The family's jitted batched body (one shared wrapper per family,
+        so reference and fused strategy hit the same compiled programs)."""
+        cache: Dict[str, Callable] = getattr(self, "_jit_cache", None)
+        if cache is None:
+            cache = {}
+            self._jit_cache = cache
+        fn = cache.get(kernel)
+        if fn is None:
+            fam = self.family(kernel)
+            fn = fam.jit_body or jax.jit(fam.batched_body)
+            cache[kernel] = fn
+        return fn
+
+    def reference_rhs(self, state):
+        """Bit-exact fused per-family reference (and the traced rhs the
+        ``lax.scan`` trajectory driver folds over)."""
+        pops = self.populations(state)
+        outs = [self.jitted_body(p.kernel)(*p.parents) for p in pops]
+        return self.assemble(state, outs)
+
+
+# ---------------------------------------------------------------------------
+# Uniform Sedov (the paper's Table II/III workload)
+# ---------------------------------------------------------------------------
+
+class UniformSedovScenario(Scenario):
+    """AMR-off Sedov blast: one kernel family, one task per sub-grid.
+
+    The cell width is uniform, so it is baked into the body at trace time
+    (the single-level fast path); custom ``body``/``batched_body`` let the
+    Pallas kernels slot in unchanged.
+    """
+
+    def __init__(self, cfg: HydroConfig, bc: str = "outflow",
+                 body: Optional[Callable] = None,
+                 batched_body: Optional[Callable] = None):
+        self.cfg = cfg
+        self.bc = bc
+        n = cfg.grids_per_edge * cfg.subgrid
+        self.h = cfg.domain / n
+        self.body = body or xla_task_body(cfg, self.h)
+        self.batched_body = batched_body or jax.vmap(self.body)
+        self.name = cfg.name
+        self._families = (KernelFamily("hydro_rhs", self.batched_body),)
+
+    def families(self):
+        return self._families
+
+    def populations(self, state):
+        subs = extract_subgrids(state, self.cfg.subgrid, self.cfg.ghost,
+                                self.bc)
+        return (TaskPopulation("hydro_rhs", (subs,)),)
+
+    def assemble(self, state, outs):
+        return assemble_global(outs[0], self.cfg.subgrid)
+
+    def warmup_parent_specs(self):
+        cfg = self.cfg
+        p = cfg.padded
+        spec = jax.ShapeDtypeStruct(
+            (cfg.n_subgrids, cfg.n_fields, p, p, p), jnp.dtype(cfg.dtype))
+        return (("hydro_rhs", (spec,)),)
+
+
+# ---------------------------------------------------------------------------
+# Two-level AMR Sedov (mixed task population, per-level traced h)
+# ---------------------------------------------------------------------------
+
+class AMRSedovScenario(Scenario):
+    """Two-level refined Sedov: state is ``(uc, uf)``; every iteration
+    yields one population per level with per-task traced ``h``.  Levels
+    whose sub-grid shapes agree share one kernel family (the same compiled
+    buckets serve both); mixed sizes open two families that aggregate
+    concurrently.  ``finalize_step`` re-syncs the covered coarse cells.
+    """
+
+    def __init__(self, cfg: AMRHydroConfig, bc: str = "outflow"):
+        self.cfg = cfg
+        self.bc = bc
+        self.name = cfg.name
+        dtype = jnp.dtype(cfg.dtype)
+        self._levels = ("coarse", "fine")
+        self._subgrid = {"coarse": cfg.coarse_subgrid,
+                         "fine": cfg.fine_subgrid}
+        self._h = {
+            "coarse": jnp.full((cfg.n_subgrids_coarse,), cfg.h_coarse, dtype),
+            "fine": jnp.full((cfg.n_subgrids_fine,), cfg.h_fine, dtype),
+        }
+        # one family per DISTINCT sub-grid size; equal sizes share everything
+        self._kernel = {lvl: f"hydro_rhs_s{self._subgrid[lvl]}"
+                        for lvl in self._levels}
+        self._families = tuple(
+            KernelFamily(f"hydro_rhs_s{s}",
+                         level_batched_body(cfg.gamma, cfg.ghost, s),
+                         level_batched_jit(cfg.gamma, cfg.ghost, s))
+            for s in dict.fromkeys(self._subgrid.values()))
+
+    def families(self):
+        return self._families
+
+    def populations(self, state):
+        uc, uf = state
+        subs = dict(zip(self._levels,
+                        extract_subgrids_multilevel(uc, uf, self.cfg,
+                                                    self.bc)))
+        return tuple(
+            TaskPopulation(self._kernel[lvl], (subs[lvl], self._h[lvl]))
+            for lvl in self._levels)
+
+    def assemble(self, state, outs):
+        return tuple(assemble_global(out, self._subgrid[lvl])
+                     for lvl, out in zip(self._levels, outs))
+
+    def finalize_step(self, state):
+        uc, uf = state
+        return sync_coarse(uc, uf, self.cfg), uf
+
+    def warmup_parent_specs(self):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        specs = []
+        for lvl in self._levels:
+            n = (cfg.n_subgrids_coarse if lvl == "coarse"
+                 else cfg.n_subgrids_fine)
+            p = self._subgrid[lvl] + 2 * cfg.ghost
+            specs.append((self._kernel[lvl], (
+                jax.ShapeDtypeStruct((n, cfg.n_fields, p, p, p), dtype),
+                jax.ShapeDtypeStruct((n,), dtype))))
+        return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# Self-gravitating Sedov (cross-solver aggregation: hydro + gravity)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _apply_gravity_source(u, dudt, pg):
+    """Couple the gravity family's output into the hydro RHS: momentum
+    gains ``rho * g`` and energy gains ``S . g``.  ONE shared jitted code
+    path for runner and reference, so bit-exactness reduces to per-family
+    kernel equivalence."""
+    rho = u[0]
+    gx, gy, gz = pg[1], pg[2], pg[3]
+    dudt = (dudt.at[1].add(rho * gx)
+                .at[2].add(rho * gy)
+                .at[3].add(rho * gz))
+    return dudt.at[4].add(u[1] * gx + u[2] * gy + u[3] * gz)
+
+
+class GravityScenario(Scenario):
+    """Sedov blast under self-gravity: TWO kernel families per iteration.
+
+    Both families consume the SAME ghost-exchanged sub-grid decomposition
+    (one parent array feeds hydro and gravity tasks alike, staged by slot
+    index) and both take the cell width as a traced per-task argument.
+    Under s3/s2+s3 their tasks are submitted interleaved into one
+    ``AggregationExecutor``: the region registry routes them by kernel id
+    into two concurrent ``TaskSignature`` families with independent bucket
+    ladders — the cross-solver aggregation the redesign exists to unlock.
+    """
+
+    def __init__(self, cfg: GravityHydroConfig, bc: str = "outflow"):
+        self.cfg = cfg
+        self.bc = bc
+        self.name = cfg.name
+        hc = cfg.hydro
+        self.h = hc.domain / (hc.grids_per_edge * hc.subgrid)
+        self._dtype = jnp.dtype(hc.dtype)
+        self._h_vec = jnp.full((hc.n_subgrids,), self.h, self._dtype)
+        self._families = (
+            KernelFamily("hydro_rhs",
+                         level_batched_body(hc.gamma, hc.ghost, hc.subgrid),
+                         level_batched_jit(hc.gamma, hc.ghost, hc.subgrid)),
+            KernelFamily("gravity",
+                         gravity_batched_body(hc.ghost, hc.subgrid,
+                                              cfg.g_const, cfg.relax_iters),
+                         gravity_batched_jit(hc.ghost, hc.subgrid,
+                                             cfg.g_const, cfg.relax_iters)),
+        )
+
+    def families(self):
+        return self._families
+
+    def populations(self, state):
+        hc = self.cfg.hydro
+        subs = extract_subgrids(state, hc.subgrid, hc.ghost, self.bc)
+        return (TaskPopulation("hydro_rhs", (subs, self._h_vec)),
+                TaskPopulation("gravity", (subs, self._h_vec)))
+
+    def assemble(self, state, outs):
+        hc = self.cfg.hydro
+        dudt = assemble_global(outs[0], hc.subgrid)
+        pg = assemble_global(outs[1], hc.subgrid)
+        return _apply_gravity_source(state, dudt, pg)
+
+    def warmup_parent_specs(self):
+        hc = self.cfg.hydro
+        p = hc.padded
+        subs = jax.ShapeDtypeStruct(
+            (hc.n_subgrids, hc.n_fields, p, p, p), self._dtype)
+        h = jax.ShapeDtypeStruct((hc.n_subgrids,), self._dtype)
+        return (("hydro_rhs", (subs, h)), ("gravity", (subs, h)))

@@ -1,0 +1,36 @@
+"""Work-aggregation strategy plugins (the paper's S1 / S2 / S3 and combos).
+
+Each strategy is one module, registered by name; ``StrategyRunner`` drives
+any :class:`~repro.core.scenario.Scenario` under any of them:
+
+* ``s1``   — larger sub-problems: not a runtime mode but a *config* (16^3
+             sub-grids via ``repro.configs.sedov.CONFIG_16``); every runner
+             accepts any config, so s1 is "same runner, bigger blocks".
+* ``s2``   — implicit aggregation (``s2.py``): one launch per task over a
+             pre-allocated executor pool, donated scatter-ring assembly.
+* ``s3``   — explicit aggregation (``s3.py``): tasks fused on-the-fly into
+             bucketed batched kernels by the multi-region
+             ``AggregationExecutor``; populations submit interleaved, so
+             heterogeneous families aggregate concurrently.
+* ``s2+s3``— s3 over a multi-executor pool (the paper's best rows).
+* ``fused``— whole-graph upper bound (``fused.py``), plus the ``lax.scan``
+             whole-trajectory driver on the runner.
+
+All strategies are bit-identical in results to the scenario's fused
+per-family reference (tested); only launch structure differs.
+"""
+from repro.core.strategies.base import (
+    RunContext, Strategy, available_strategies, get_strategy_class,
+    register_strategy,
+)
+from repro.core.strategies import fused, s2, s3   # noqa: F401  (register)
+from repro.core.strategies.runner import (
+    AMRStrategyRunner, HydroStrategyRunner, StrategyRunner,
+)
+from repro.core.scenario import xla_task_body     # noqa: F401  (legacy path)
+
+__all__ = [
+    "RunContext", "Strategy", "available_strategies", "get_strategy_class",
+    "register_strategy", "StrategyRunner",
+    "AMRStrategyRunner", "HydroStrategyRunner", "xla_task_body",
+]

@@ -1,0 +1,79 @@
+"""Strategy plugin base: the registry, the ``Strategy`` interface and the
+shared ``RunContext``.
+
+A strategy decides HOW a scenario's task populations launch; it is
+registered by name and implements ``run_iteration(scenario, state, ctx)``.
+Adding a strategy is one file in this package:
+
+    @register_strategy("mine")
+    class MyStrategy(Strategy):
+        def run_iteration(self, scenario, state, ctx):
+            ...
+            return scenario.assemble(state, outs)
+
+``StrategyRunner`` (``runner.py``) validates names against the registry at
+construction — unknown strategies fail fast with the valid names listed,
+not on the first ``rhs()`` call deep inside an iteration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, ClassVar, Dict, Optional, Tuple, Type
+
+from repro.configs.base import AggregationConfig
+from repro.core.aggregation import AggregationExecutor
+from repro.core.executor import ExecutorPool
+
+_REGISTRY: Dict[str, Type["Strategy"]] = {}
+
+
+def register_strategy(*names: str):
+    """Class decorator: register a Strategy under one or more names."""
+    def deco(cls: Type["Strategy"]) -> Type["Strategy"]:
+        for name in names:
+            _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy_class(name: str) -> Type["Strategy"]:
+    """Resolve a strategy name, failing fast with the valid names listed."""
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown strategy {name!r} — valid strategies: "
+            f"{', '.join(available_strategies())}")
+    return cls
+
+
+@dataclass
+class RunContext:
+    """Everything a strategy shares across iterations: the launch config,
+    the executor pool, the (optional) aggregation executor, the unified
+    stats dict and a private compiled-program cache."""
+
+    config: AggregationConfig
+    pool: ExecutorPool
+    executor: Optional[AggregationExecutor]
+    stats: Dict[str, Any]
+    caches: Dict[Any, Any] = field(default_factory=dict)
+
+
+class Strategy:
+    """One launch structure.  Stateless by convention: per-run compiled
+    programs live in ``ctx.caches`` so a strategy instance can serve any
+    scenario (behavioral knobs — executor count, bucket cap, staging mode —
+    arrive via ``ctx.config``, which is how "s3" and "s2+s3" share one
+    class).  ``uses_executor`` tells the runner to construct (and register
+    the scenario's families with) an ``AggregationExecutor``."""
+
+    name: ClassVar[str] = ""
+    uses_executor: ClassVar[bool] = False
+
+    def run_iteration(self, scenario, state, ctx: RunContext):
+        """One solver iteration: launch every population, assemble d(state)."""
+        raise NotImplementedError

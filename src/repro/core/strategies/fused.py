@@ -1,0 +1,23 @@
+"""``fused``: the whole-graph upper bound — one jitted launch per family.
+
+What a static whole-graph compiler can do when the task structure is known
+ahead of time; the paper's dynamic AMR setting is precisely where this is
+NOT generally available.  Uses the scenario's shared jitted bodies, so the
+fused strategy IS the bit-exact reference (``Scenario.reference_rhs``) by
+construction.
+"""
+from __future__ import annotations
+
+from repro.core.strategies.base import RunContext, Strategy, register_strategy
+
+
+@register_strategy("fused")
+class FusedStrategy(Strategy):
+    name = "fused"
+
+    def run_iteration(self, scenario, state, ctx: RunContext):
+        outs = []
+        for pop in scenario.populations(state):
+            outs.append(scenario.jitted_body(pop.kernel)(*pop.parents))
+            ctx.stats["kernel_launches"] += 1
+        return scenario.assemble(state, outs)

@@ -1,0 +1,180 @@
+"""The one execution facade: ``StrategyRunner(scenario, agg)``.
+
+Replaces the legacy per-workload runners (``HydroStrategyRunner`` /
+``AMRStrategyRunner`` survive below as deprecation shims): the runner owns
+the executor pool, the (optional) multi-region ``AggregationExecutor``
+with every scenario family registered, the unified stats, and the
+scenario-agnostic drivers — RK3 stepping over arbitrary state pytrees,
+AOT bucket warmup, and the ``lax.scan`` whole-trajectory program (now
+uniform across scenarios, AMR included).
+
+Strategy names are validated against the plugin registry at CONSTRUCTION
+(listing the valid names on error), not on the first ``rhs()`` call.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    AMRHydroConfig, AggregationConfig, HydroConfig,
+)
+from repro.core.aggregation import AggregationExecutor
+from repro.core.executor import ExecutorPool
+from repro.core.scenario import (
+    AMRSedovScenario, Scenario, UniformSedovScenario,
+)
+from repro.core.strategies.base import RunContext, get_strategy_class
+
+
+class StrategyRunner:
+    """Drives any :class:`~repro.core.scenario.Scenario` under any
+    registered strategy.  ``state`` is whatever pytree the scenario
+    defines (a bare array for the uniform grid, ``(uc, uf)`` for AMR).
+
+    ``stats`` is the unified observability surface: ``kernel_launches`` /
+    ``iterations`` / ``staging_s`` accumulate per-call deltas for every
+    strategy, and — when an aggregation executor exists — ``regions`` is a
+    live view of the per-``TaskSignature``-family bucket histograms.
+    Per-family launch counts are on ``launches_by_family``.
+    """
+
+    def __init__(self, scenario: Scenario, agg: AggregationConfig):
+        strategy_cls = get_strategy_class(agg.strategy)   # fail fast
+        self.scenario = scenario
+        self.agg = agg
+        self.strategy = agg.strategy
+        self._strategy = strategy_cls()
+        self.pool = ExecutorPool(max(1, agg.n_executors))
+        self._agg_exec: Optional[AggregationExecutor] = None
+        self.stats: Dict[str, Any] = {"kernel_launches": 0, "iterations": 0,
+                                      "staging_s": 0.0}
+        if strategy_cls.uses_executor:
+            self._agg_exec = AggregationExecutor(
+                None, agg, pool=self.pool, name=scenario.name)
+            for fam in scenario.families():
+                self._agg_exec.register(fam.kernel, fam.batched_body)
+            self.stats["regions"] = self._agg_exec.stats["regions"]
+        self.ctx = RunContext(config=agg, pool=self.pool,
+                              executor=self._agg_exec, stats=self.stats)
+        self._traj_cache: Dict[int, Callable] = {}
+
+    # -- observability -----------------------------------------------------
+    @property
+    def executor(self) -> Optional[AggregationExecutor]:
+        """The multi-region aggregation executor (s3/s2+s3), else None."""
+        return self._agg_exec
+
+    @property
+    def launches_by_family(self) -> dict:
+        return self.pool.launches_by_family
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self) -> None:
+        """AOT pre-compile every family's gather/prefix buckets from the
+        parent shapes the scenario's submission waves will reference
+        (shape-agreeing waves are deduplicated)."""
+        if self._agg_exec is None:
+            return
+        seen = set()
+        for kernel, parent_specs in self.scenario.warmup_parent_specs():
+            key = (kernel, tuple((tuple(p.shape), str(p.dtype))
+                                 for p in parent_specs))
+            if key in seen:
+                continue
+            seen.add(key)
+            self._agg_exec.warmup(kernel=kernel, parent_shapes=parent_specs)
+
+    # -- one solver iteration ----------------------------------------------
+    def rhs(self, state):
+        self.stats["iterations"] += 1
+        return self._strategy.run_iteration(self.scenario, state, self.ctx)
+
+    # -- RK3 (three iterations per time-step, as in the paper) -------------
+    def rk3_step(self, state, dt):
+        tm = jax.tree_util.tree_map
+        l0 = self.rhs(state)
+        u1 = tm(lambda u, l: u + dt * l, state, l0)
+        l1 = self.rhs(u1)
+        u2 = tm(lambda u, a, l: 0.75 * u + 0.25 * (a + dt * l),
+                state, u1, l1)
+        l2 = self.rhs(u2)
+        out = tm(lambda u, a, l: (1.0 / 3.0) * u + (2.0 / 3.0) * (a + dt * l),
+                 state, u2, l2)
+        return self.scenario.finalize_step(out)
+
+    # -- whole-trajectory scan driver (fused upper bound) ------------------
+    def _trajectory_impl(self, n_steps: int, state, dt):
+        tm = jax.tree_util.tree_map
+
+        def body(s, _):
+            l0 = self.scenario.reference_rhs(s)
+            u1 = tm(lambda u, l: u + dt * l, s, l0)
+            l1 = self.scenario.reference_rhs(u1)
+            u2 = tm(lambda u, a, l: 0.75 * u + 0.25 * (a + dt * l),
+                    s, u1, l1)
+            l2 = self.scenario.reference_rhs(u2)
+            out = tm(lambda u, a, l: (1.0 / 3.0) * u
+                     + (2.0 / 3.0) * (a + dt * l), s, u2, l2)
+            return self.scenario.finalize_step(out), None
+
+        out, _ = jax.lax.scan(body, state, None, length=n_steps)
+        return out
+
+    def rk3_trajectory(self, state, dt, n_steps: int):
+        """Run ``n_steps`` RK3 steps.  Under ``fused`` the whole trajectory
+        is ONE donated ``lax.scan`` program (single dispatch, state updated
+        in place) — for EVERY scenario, AMR included; other strategies
+        fall back to the per-step loop."""
+        if self.strategy != "fused":
+            for _ in range(n_steps):
+                state = self.rk3_step(state, dt)
+            return state
+        fn = self._traj_cache.get(n_steps)
+        if fn is None:
+            fn = jax.jit(partial(self._trajectory_impl, n_steps),
+                         donate_argnums=(0,))
+            self._traj_cache[n_steps] = fn
+        # donate a private copy so the caller's state stays valid; inside
+        # the program the scan carry aliases the donated buffers
+        out = fn(jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                        state), dt)
+        self.stats["kernel_launches"] += 1
+        self.stats["iterations"] += 3 * n_steps
+        return out
+
+    def time_step(self, state, dt, n_steps: int = 1,
+                  use_scan: bool = False) -> float:
+        """Average wall seconds per time-step (the Table III metric)."""
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        if use_scan and self.strategy == "fused":
+            out = self.rk3_trajectory(state, dt, n_steps)
+        else:
+            out = state
+            for _ in range(n_steps):
+                out = self.rk3_step(out, dt)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n_steps
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims over the facade (state/call conventions are the new
+# ones: the AMR runner's state is a (uc, uf) tuple)
+# ---------------------------------------------------------------------------
+
+def HydroStrategyRunner(cfg: HydroConfig, agg: AggregationConfig,
+                        bc: str = "outflow", body=None, batched_body=None):
+    """Deprecated: ``StrategyRunner(UniformSedovScenario(cfg), agg)``."""
+    return StrategyRunner(UniformSedovScenario(cfg, bc=bc, body=body,
+                                               batched_body=batched_body), agg)
+
+
+def AMRStrategyRunner(cfg: AMRHydroConfig, agg: AggregationConfig,
+                      bc: str = "outflow"):
+    """Deprecated: ``StrategyRunner(AMRSedovScenario(cfg), agg)``."""
+    return StrategyRunner(AMRSedovScenario(cfg, bc=bc), agg)

@@ -1,0 +1,70 @@
+"""``s2``: implicit aggregation — one launch per task, round-robin over a
+pre-allocated executor pool; the runtime is left to overlap them (paper
+finding: works iff the runtime can — reproduced here).
+
+Each launch slices task ``i`` out of the population's parent arrays and
+scatters its result into a donated output slot ring, all inside one
+compiled program (``lax.dynamic_slice`` + ``lax.dynamic_update_slice`` on
+an in-place buffer) — ZERO host-side slicing or concatenation.  The body
+runs at bucket size 1, so every strategy executes the SAME compiled kernel
+(bit-identical results by construction, the paper's shared-kernel design).
+
+Tradeoff: the donated carry chains launches at the device level, which
+costs nothing on XLA:CPU/TPU (one program at a time per core — only host
+dispatch pipelining matters, and enqueues still return immediately) but
+would forfeit inter-stream concurrency on a CUDA-like backend; DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import RunContext, Strategy, register_strategy
+
+
+def _make_scatter(batched):
+    @partial(jax.jit, donate_argnums=(0,))
+    def scatter(out_ring, i, *parents):
+        task = tuple(jax.lax.dynamic_slice_in_dim(p, i, 1, axis=0)
+                     for p in parents)
+        return jax.lax.dynamic_update_slice(
+            out_ring, batched(*task), (i,) + (0,) * (out_ring.ndim - 1))
+    return scatter
+
+
+@register_strategy("s2")
+class S2Strategy(Strategy):
+    name = "s2"
+
+    def _scatter_for(self, scenario, kernel, ctx: RunContext):
+        key = ("s2_scatter", kernel)
+        fn = ctx.caches.get(key)
+        if fn is None:
+            fn = _make_scatter(scenario.family(kernel).batched_body)
+            ctx.caches[key] = fn
+        return fn
+
+    def _ring_spec(self, scenario, pop, ctx: RunContext):
+        shapes = tuple((p.shape, str(p.dtype)) for p in pop.parents)
+        key = ("s2_out", pop.kernel, shapes)
+        spec = ctx.caches.get(key)
+        if spec is None:
+            spec = jax.eval_shape(scenario.family(pop.kernel).batched_body,
+                                  *pop.parents)
+            ctx.caches[key] = spec
+        return spec
+
+    def run_iteration(self, scenario, state, ctx: RunContext):
+        outs = []
+        for pop in scenario.populations(state):
+            scatter = self._scatter_for(scenario, pop.kernel, ctx)
+            spec = self._ring_spec(scenario, pop, ctx)
+            ring = jnp.zeros(spec.shape, spec.dtype)
+            for i in range(pop.n_tasks):
+                ring = ctx.pool.get().launch(scatter, ring, jnp.int32(i),
+                                             *pop.parents, family=pop.kernel)
+            outs.append(ring)
+            ctx.stats["kernel_launches"] += pop.n_tasks
+        return scenario.assemble(state, outs)

@@ -1,0 +1,81 @@
+"""``s3`` / ``s2+s3``: explicit on-the-fly aggregation through the
+multi-region ``AggregationExecutor``.
+
+Tasks from ALL of the scenario's populations are submitted **interleaved**
+(round-robin across kernel families, slot order within each family) into
+ONE executor: the region registry routes each task by ``TaskSignature`` to
+its family's slot ring / queue / bucket ladder, so heterogeneous families
+— coarse+fine AMR levels, or the hydro and gravity solvers — aggregate
+concurrently instead of serializing.  Populations that SHARE a kernel
+(e.g. two AMR levels with equal sub-grid shapes) submit sequentially
+within their family's round-robin turn: a launch gathers from one parent
+set, so alternating their parents task-by-task would shatter every bucket
+via the executor's parent-switch flush.  ``s2+s3`` is the same strategy
+over a multi-executor pool (the paper's best rows).
+
+Inputs stage by slot index (``submit_indexed``: one gather or prefix slice
+per launch over the already-device-resident parents, DESIGN.md §3); the
+seed's slice -> host-stack -> launch cycle survives as ``staging="host"``
+so benchmarks/launch_overhead.py can measure the win.  Stats report
+per-call DELTAS — the executor's own counters are cumulative, so the wave
+is snapshotted around the submissions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import gather_futures
+from repro.core.strategies.base import RunContext, Strategy, register_strategy
+
+
+@register_strategy("s3", "s2+s3")
+class S3Strategy(Strategy):
+    name = "s3"
+    uses_executor = True
+
+    def run_iteration(self, scenario, state, ctx: RunContext):
+        exe = ctx.executor
+        pops = scenario.populations(state)
+        before_launches = exe.stats["launches"]
+        before_staging = exe.stats["staging_s"]
+        host = ctx.config.staging == "host"
+        futs = [[] for _ in pops]
+        # flatten each kernel family's populations into one ordered task
+        # list, then round-robin one submission per family per turn
+        lanes = {}
+        for pi, pop in enumerate(pops):
+            lanes.setdefault(pop.kernel, []).extend(
+                (pi, pop, i) for i in range(pop.n_tasks))
+        cursors = [iter(lane) for lane in lanes.values()]
+        while cursors:
+            live = []
+            for cur in cursors:                   # interleave the families
+                nxt = next(cur, None)
+                if nxt is None:
+                    continue
+                pi, pop, i = nxt
+                if host:
+                    futs[pi].append(exe.submit(
+                        *(par[i] for par in pop.parents), kernel=pop.kernel))
+                else:
+                    futs[pi].append(exe.submit_indexed(pop.parents, i,
+                                                       kernel=pop.kernel))
+                live.append(cur)
+            cursors = live
+        exe.flush()
+        # a population may legitimately be empty this iteration (dynamic
+        # task structure, e.g. a refinement level with no patches): hand
+        # assemble a zero-length batch instead of gathering nothing
+        outs = []
+        for pop, f in zip(pops, futs):
+            if f:
+                outs.append(gather_futures(f))
+            else:
+                spec = jax.eval_shape(
+                    scenario.family(pop.kernel).batched_body, *pop.parents)
+                outs.append(jnp.zeros(spec.shape, spec.dtype))
+        ctx.stats["staging_s"] += exe.stats["staging_s"] - before_staging
+        ctx.stats["kernel_launches"] += (exe.stats["launches"]
+                                         - before_launches)
+        return scenario.assemble(state, outs)

@@ -269,7 +269,7 @@ def hydro_rhs_pallas_prefix(ring: jax.Array, start, bucket: int, *,
 def pallas_batched_body(cfg, h: float, layout: str = "slot_grid",
                         interpret: bool = True):
     """Factory: a batched task body backed by the Pallas kernel, drop-in for
-    ``HydroStrategyRunner(batched_body=...)`` / ``AggregationExecutor`` —
+    ``UniformSedovScenario(batched_body=...)`` / ``AggregationExecutor`` —
     the path that runs the paper's GPU kernels through the slot-ring
     aggregation pipeline instead of the XLA oracle."""
     def batched(u_slots):

@@ -8,6 +8,18 @@ import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+
+def greedy_launches(q: int, buckets) -> int:
+    """Shared oracle: launches the executor's greedy bucket decomposition
+    performs for a queue of length q (import from tests as
+    ``from conftest import greedy_launches``)."""
+    n = 0
+    while q:
+        b = max(x for x in buckets if x <= q)
+        q -= b
+        n += 1
+    return n
+
 # ---------------------------------------------------------------------------
 # hypothesis fallback: the container image ships without `hypothesis`, which
 # made test_aggregation.py / test_moe.py fail at collection.  When the real

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import (
     AggregationExecutor, BufferPool, DeviceExecutor, ExecutorPool,
-    HydroStrategyRunner,
+    StrategyRunner, UniformSedovScenario,
 )
 from repro.hydro.state import sedov_init
 from repro.hydro.stepper import courant_dt, rk3_step
@@ -107,7 +107,7 @@ def test_buffer_pool_stage():
 def sedov_state():
     st = sedov_init(CFG)
     dt = courant_dt(st.u, CFG)
-    ref_runner = HydroStrategyRunner(CFG, AggregationConfig(
+    ref_runner = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="fused", n_executors=1, max_aggregated=1))
     ref = ref_runner.rk3_step(st.u, dt)
     return st, dt, ref
@@ -128,7 +128,7 @@ def test_strategy_equivalence(sedov_state, strategy, n_exec, max_agg):
     st, dt, ref = sedov_state
     agg = AggregationConfig(strategy=strategy, n_executors=n_exec,
                             max_aggregated=max_agg)
-    r = HydroStrategyRunner(CFG, agg)
+    r = StrategyRunner(UniformSedovScenario(CFG), agg)
     out = r.rk3_step(st.u, dt)
     scale = float(np.max(np.abs(np.asarray(ref))))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
@@ -138,13 +138,15 @@ def test_strategy_equivalence(sedov_state, strategy, n_exec, max_agg):
 def test_strategy_launch_counts(sedov_state):
     st, dt, _ = sedov_state
     n = CFG.n_subgrids
-    s2 = HydroStrategyRunner(CFG, AggregationConfig(strategy="s2"))
+    s2 = StrategyRunner(UniformSedovScenario(CFG),
+                        AggregationConfig(strategy="s2"))
     s2.rhs(st.u)
     assert s2.stats["kernel_launches"] == n            # one per task
-    fused = HydroStrategyRunner(CFG, AggregationConfig(strategy="fused"))
+    fused = StrategyRunner(UniformSedovScenario(CFG),
+                           AggregationConfig(strategy="fused"))
     fused.rhs(st.u)
     assert fused.stats["kernel_launches"] == 1
-    s3 = HydroStrategyRunner(CFG, AggregationConfig(
+    s3 = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="s3", max_aggregated=n, launch_watermark=10**9))
     s3.rhs(st.u)
     # cap==n and watermark disabled -> at most a few bucketed launches

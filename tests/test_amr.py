@@ -19,7 +19,7 @@ import pytest
 
 from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
 from repro.configs.base import AMRHydroConfig, AggregationConfig
-from repro.core import AMRStrategyRunner
+from repro.core import AMRSedovScenario, StrategyRunner
 from repro.hydro.state import (
     amr_sedov_init, extract_subgrids_multilevel, prolong_coarse,
     restrict_fine, sync_coarse,
@@ -110,8 +110,8 @@ def test_amr_strategy_bit_identical_to_reference(sedov_amr, strategy,
     st, dt, (ref_c, ref_f) = sedov_amr
     agg = AggregationConfig(strategy=strategy, n_executors=n_exec,
                             max_aggregated=max_agg, launch_watermark=WM)
-    r = AMRStrategyRunner(CONFIG, agg)
-    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    r = StrategyRunner(AMRSedovScenario(CONFIG), agg)
+    out_c, out_f = r.rk3_step((st.uc, st.uf), dt)
     np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
     np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
 
@@ -122,9 +122,9 @@ def test_amr_shared_shape_levels_share_one_family(sedov_amr):
     st, dt, _ = sedov_amr
     agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
                             launch_watermark=WM)
-    r = AMRStrategyRunner(CONFIG, agg)
-    r.rk3_step(st.uc, st.uf, dt)
-    regions = r._agg_exec.stats["regions"]
+    r = StrategyRunner(AMRSedovScenario(CONFIG), agg)
+    r.rk3_step((st.uc, st.uf), dt)
+    regions = r.stats["regions"]
     assert len(regions) == 1
     (hist,) = [v["aggregated_hist"] for v in regions.values()]
     # 3 RK3 iterations x (1 coarse + 1 fine) launch, all through bucket 8
@@ -142,16 +142,16 @@ def test_amr_mixed_subgrids_two_families_one_executor():
     ref_c, ref_f = amr_reference_step(st.uc, st.uf, dt, cfg)
     agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
                             launch_watermark=WM)
-    r = AMRStrategyRunner(cfg, agg)
-    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    r = StrategyRunner(AMRSedovScenario(cfg), agg)
+    out_c, out_f = r.rk3_step((st.uc, st.uf), dt)
     np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
     np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
-    regions = r._agg_exec.stats["regions"]
+    regions = r.stats["regions"]
     assert len(regions) == 2
     hists = {k: v["aggregated_hist"] for k, v in regions.items()}
     assert hists["hydro_rhs_s16[5x22x22x22,scalar]"] == {1: 3}
     assert hists["hydro_rhs_s8[5x14x14x14,scalar]"] == {8: 3}
-    by_family = r.pool.launches_by_family
+    by_family = r.launches_by_family
     assert by_family == {"hydro_rhs_s16": 3, "hydro_rhs_s8": 3}
 
 
@@ -159,13 +159,13 @@ def test_amr_warmup_precompiles_both_families(sedov_amr):
     st, dt, (ref_c, ref_f) = sedov_amr
     agg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
                             launch_watermark=WM)
-    r = AMRStrategyRunner(CONFIG, agg)
+    r = StrategyRunner(AMRSedovScenario(CONFIG), agg)
     r.warmup()
-    compiled = [v for region in r._agg_exec.regions.values()
+    compiled = [v for region in r.executor.regions.values()
                 for v in region.compiled.values()]
     assert compiled and all(isinstance(f, jax.stages.Compiled)
                             for f in compiled)
-    out_c, out_f = r.rk3_step(st.uc, st.uf, dt)
+    out_c, out_f = r.rk3_step((st.uc, st.uf), dt)
     np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
     np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
 

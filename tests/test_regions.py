@@ -11,17 +11,18 @@ The PR's invariants (DESIGN.md §7):
 * ``warmup(parent_shapes=...)`` AOT-compiles the indexed-gather and
   contiguous-prefix programs (closing the DESIGN.md §6 gap);
 * SlotRing coalesces k pending slot writes into one donated scatter;
-* every HydroStrategyRunner strategy reports per-call stat deltas.
+* every StrategyRunner strategy reports per-call stat deltas.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import greedy_launches
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import (
-    AggregationExecutor, HydroStrategyRunner, SlotRing, TaskSignature,
-    gather_futures,
+    AggregationExecutor, SlotRing, StrategyRunner, TaskSignature,
+    UniformSedovScenario, gather_futures,
 )
 from repro.hydro.state import sedov_init
 from repro.hydro.stepper import courant_dt
@@ -35,15 +36,6 @@ def _affine(x):
 
 def _square(x):
     return x * x + 3.0
-
-
-def _greedy_launches(q: int, buckets) -> int:
-    n = 0
-    while q:
-        b = max(x for x in buckets if x <= q)
-        q -= b
-        n += 1
-    return n
 
 
 # ---------------------------------------------------------------------------
@@ -101,8 +93,8 @@ def test_interleaved_families_launch_counts_pinned():
                                      kernel="square"))
     exe.flush()
     buckets = cfg.bucket_sizes()
-    want_a = _greedy_launches(7, buckets)           # 4+2+1 -> 3
-    want_b = _greedy_launches(5, buckets)           # 4+1   -> 2
+    want_a = greedy_launches(7, buckets)           # 4+2+1 -> 3
+    want_b = greedy_launches(5, buckets)           # 4+1   -> 2
     assert exe.stats["launches"] == want_a + want_b
     regions = exe.stats["regions"]
     assert set(regions) == {"affine[2]", "square[3x4]"}
@@ -259,7 +251,7 @@ def test_stats_deltas_accumulate_per_call(sedov, strategy, n_exec, max_agg,
     """Every strategy reports kernel_launches as accumulated per-call deltas
     (s3 used to OVERWRITE with the executor's cumulative counter)."""
     st, dt = sedov
-    r = HydroStrategyRunner(CFG, AggregationConfig(
+    r = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy=strategy, n_executors=n_exec, max_aggregated=max_agg,
         launch_watermark=10**9))
     r.rhs(st.u)

@@ -1,0 +1,248 @@
+"""Scenario/Strategy plugin API: registry validation, extensibility, the
+uniform trajectory driver, and the two-family drain property.
+
+* unknown strategy names fail at ``StrategyRunner`` CONSTRUCTION with the
+  valid names listed (not on the first rhs() deep inside an iteration);
+* a user-defined toy Scenario runs unmodified under every registered
+  strategy and matches its own fused reference exactly (the "adding a
+  scenario is one file" claim);
+* the ``lax.scan`` whole-trajectory driver is uniform across scenarios —
+  the AMR scenario gets the same ``use_scan`` path the uniform runner had;
+* property test (hypothesis, falls back to the deterministic shim in
+  conftest.py): ANY random interleaving of two TaskSignature families
+  drains with each family's exact greedy bucket decomposition, and
+  ``gather_futures`` reassembles per-family results in submission order;
+  mixed-family gathers across output shapes fail loudly.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import greedy_launches
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.amr_sedov import CONFIG as AMR_CONFIG
+from repro.configs.base import AggregationConfig
+from repro.core import (
+    AMRSedovScenario, AggregationExecutor, KernelFamily, Scenario,
+    StrategyRunner, TaskPopulation, available_strategies, gather_futures,
+)
+from repro.hydro.state import amr_sedov_init
+from repro.hydro.stepper import amr_courant_dt
+
+WM = 10 ** 9
+
+
+# ---------------------------------------------------------------------------
+# registry validation (fail fast, not deep inside rhs)
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_strategies():
+    names = available_strategies()
+    for name in ("s2", "s3", "s2+s3", "fused"):
+        assert name in names
+
+
+def test_unknown_strategy_fails_at_construction():
+    with pytest.raises(ValueError) as ei:
+        StrategyRunner(_ToyScenario(5),
+                       AggregationConfig(strategy="warp10"))
+    msg = str(ei.value)
+    assert "warp10" in msg
+    for name in available_strategies():     # the error lists valid names
+        assert name in msg
+
+
+# ---------------------------------------------------------------------------
+# extensibility: a toy scenario is one class, runs under every strategy
+# ---------------------------------------------------------------------------
+
+def _toy_body(x, w):
+    return 2.0 * x + w[..., None]
+
+
+class _ToyScenario(Scenario):
+    """Minimal Scenario: state (n, 4), one family, per-task traced weight."""
+
+    name = "toy"
+
+    def __init__(self, n: int):
+        self.n = n
+        self.w = jnp.arange(float(n))
+        self._families = (KernelFamily("toy_affine", jax.vmap(_toy_body)),)
+
+    def families(self):
+        return self._families
+
+    def populations(self, state):
+        return (TaskPopulation("toy_affine", (state, self.w)),)
+
+    def assemble(self, state, outs):
+        return outs[0]
+
+    def warmup_parent_specs(self):
+        return (("toy_affine", (
+            jax.ShapeDtypeStruct((self.n, 4), jnp.float32),
+            jax.ShapeDtypeStruct((self.n,), jnp.float32))),)
+
+
+@pytest.mark.parametrize("strategy,n_exec,max_agg", [
+    ("fused", 1, 1),
+    ("s2", 2, 1),
+    ("s3", 1, 4),
+    ("s2+s3", 2, 8),
+])
+def test_toy_scenario_runs_under_every_strategy(strategy, n_exec, max_agg):
+    n = 5
+    sc = _ToyScenario(n)
+    state = jnp.arange(float(n * 4)).reshape(n, 4)
+    ref = sc.reference_rhs(state)
+    r = StrategyRunner(_ToyScenario(n), AggregationConfig(
+        strategy=strategy, n_executors=n_exec, max_aggregated=max_agg,
+        launch_watermark=WM))
+    out = r.rhs(state)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert r.stats["iterations"] == 1 and r.stats["kernel_launches"] >= 1
+
+
+class _SparseScenario(_ToyScenario):
+    """Two families, one of which is EMPTY this iteration — the dynamic
+    task structure (a refinement level with no patches) the plugin API
+    must tolerate under every strategy."""
+
+    def __init__(self, n: int):
+        super().__init__(n)
+        self._families = self._families + (
+            KernelFamily("toy_square", jax.vmap(_toy_square)),)
+
+    def populations(self, state):
+        return (TaskPopulation("toy_affine", (state, self.w)),
+                TaskPopulation("toy_square", (state[:0], self.w[:0])))
+
+    def assemble(self, state, outs):
+        return outs[0] + jnp.sum(outs[1])
+
+
+def _toy_square(x, w):
+    return x * x + w[..., None]
+
+
+@pytest.mark.parametrize("strategy", ["fused", "s2", "s3", "s2+s3"])
+def test_zero_task_population_is_tolerated(strategy):
+    n = 4
+    sc = _SparseScenario(n)
+    state = jnp.arange(float(n * 4)).reshape(n, 4)
+    ref = sc.reference_rhs(state)
+    r = StrategyRunner(_SparseScenario(n), AggregationConfig(
+        strategy=strategy, n_executors=2, max_aggregated=4,
+        launch_watermark=WM))
+    out = r.rhs(state)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_toy_scenario_warmup_via_facade():
+    r = StrategyRunner(_ToyScenario(6), AggregationConfig(
+        strategy="s3", max_aggregated=4, launch_watermark=WM))
+    r.warmup()
+    assert len(r.executor.regions) == 1
+    state = jnp.ones((6, 4))
+    np.testing.assert_array_equal(
+        np.asarray(r.rhs(state)),
+        np.asarray(_ToyScenario(6).reference_rhs(state)))
+
+
+# ---------------------------------------------------------------------------
+# uniform trajectory driver: AMR now has the use_scan path (API parity)
+# ---------------------------------------------------------------------------
+
+def test_amr_trajectory_scan_matches_step_loop():
+    st = amr_sedov_init(AMR_CONFIG)
+    dt = amr_courant_dt(st.uc, st.uf, AMR_CONFIG)
+    r = StrategyRunner(AMRSedovScenario(AMR_CONFIG),
+                       AggregationConfig(strategy="fused"))
+    loop = (st.uc, st.uf)
+    for _ in range(2):
+        loop = r.rk3_step(loop, dt)
+    before = r.stats["kernel_launches"]
+    scan = r.rk3_trajectory((st.uc, st.uf), dt, 2)
+    assert r.stats["kernel_launches"] == before + 1   # ONE dispatch
+    for got, want in zip(scan, loop):
+        scale = float(np.max(np.abs(np.asarray(want))))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5 * scale, rtol=1e-5)
+    # the caller's state arrays must survive (the driver donates a copy);
+    # materialize them — a donated buffer raises on read, not on .shape
+    assert np.asarray(st.uc).shape[0] == AMR_CONFIG.n_fields
+    assert np.asarray(st.uf).shape[0] == AMR_CONFIG.n_fields
+
+
+def test_amr_time_step_accepts_use_scan():
+    st = amr_sedov_init(AMR_CONFIG)
+    dt = amr_courant_dt(st.uc, st.uf, AMR_CONFIG)
+    r = StrategyRunner(AMRSedovScenario(AMR_CONFIG),
+                       AggregationConfig(strategy="fused"))
+    sec = r.time_step((st.uc, st.uf), dt, n_steps=2, use_scan=True)
+    assert sec > 0.0
+    assert r.stats["iterations"] == 6
+
+
+# ---------------------------------------------------------------------------
+# property: random two-family interleavings drain greedily, gather in order
+# ---------------------------------------------------------------------------
+
+def _affine(x):
+    return 2.0 * x + 1.0
+
+
+def _square(x):
+    return x * x + 3.0
+
+
+@given(n_a=st.integers(0, 24), n_b=st.integers(1, 24),
+       max_agg=st.integers(1, 8), seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_random_two_family_interleaving_property(n_a, n_b, max_agg, seed):
+    """For ANY submission interleaving of two families (distinct kernels,
+    distinct shapes): each family drains with ITS OWN exact greedy bucket
+    decomposition, per-family results gather in submission order, and a
+    cross-family gather fails loudly."""
+    cfg = AggregationConfig(strategy="s3", n_executors=1,
+                            max_aggregated=max_agg, launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg, name="affine")
+    exe.register("square", jax.vmap(_square))
+    order = ["a"] * n_a + ["b"] * n_b
+    random.Random(seed).shuffle(order)
+    counters = {"a": 0, "b": 0}
+    futs = {"a": [], "b": []}
+    for fam in order:
+        i = counters[fam]
+        counters[fam] += 1
+        if fam == "a":
+            futs["a"].append(exe.submit(jnp.full((2,), float(i))))
+        else:
+            futs["b"].append(exe.submit(jnp.full((3,), float(i)),
+                                        kernel="square"))
+    exe.flush()
+    buckets = cfg.bucket_sizes()
+    assert exe.stats["launches"] == (greedy_launches(n_a, buckets)
+                                     + greedy_launches(n_b, buckets))
+    by_region = {k.split("[")[0]: v
+                 for k, v in exe.stats["regions"].items()}
+    assert sum(k * v for k, v in
+               by_region["square"]["aggregated_hist"].items()) == n_b
+    if n_a:
+        assert sum(k * v for k, v in
+                   by_region["affine"]["aggregated_hist"].items()) == n_a
+        out_a = np.asarray(gather_futures(futs["a"]))
+        np.testing.assert_array_equal(
+            out_a, np.stack([np.full(2, 2.0 * i + 1.0)
+                             for i in range(n_a)]))
+    out_b = np.asarray(gather_futures(futs["b"]))
+    np.testing.assert_array_equal(
+        out_b, np.stack([np.full(3, float(i) ** 2 + 3.0)
+                         for i in range(n_b)]))
+    if n_a:                                 # mixed-family error path
+        with pytest.raises(ValueError):
+            gather_futures(futs["a"] + futs["b"])

@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import greedy_launches
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import (
-    AggregationExecutor, HydroStrategyRunner, SlotRing, SlotView,
-    gather_futures,
+    AggregationExecutor, SlotRing, SlotView, StrategyRunner,
+    UniformSedovScenario, gather_futures,
 )
 from repro.hydro.state import extract_subgrids, sedov_init
 from repro.hydro.stepper import courant_dt, rk3_step, rk3_trajectory
@@ -89,15 +90,6 @@ def test_executor_ring_compaction_under_watermark_remainders():
 # launch accounting: greedy bucket decomposition
 # ---------------------------------------------------------------------------
 
-def _greedy_launches(q: int, buckets) -> int:
-    n = 0
-    while q:
-        b = max(x for x in buckets if x <= q)
-        q -= b
-        n += 1
-    return n
-
-
 @pytest.mark.parametrize("n_tasks", [1, 3, 7, 12, 29, 64])
 def test_launches_match_greedy_bucket_prediction(n_tasks):
     cfg = AggregationConfig(strategy="s3", n_executors=1, max_aggregated=16,
@@ -106,7 +98,7 @@ def test_launches_match_greedy_bucket_prediction(n_tasks):
     for i in range(n_tasks):
         exe.submit(jnp.full((2,), float(i)))
     exe.flush()
-    assert exe.stats["launches"] == _greedy_launches(
+    assert exe.stats["launches"] == greedy_launches(
         n_tasks, cfg.bucket_sizes())
     assert sum(k * v for k, v in exe.stats["aggregated_hist"].items()) \
         == n_tasks
@@ -250,7 +242,7 @@ def test_mode_switch_flushes_pending():
 def sedov():
     st = sedov_init(CFG)
     dt = courant_dt(st.u, CFG)
-    ref = HydroStrategyRunner(CFG, AggregationConfig(
+    ref = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="fused")).rk3_step(st.u, dt)
     return st, dt, ref
 
@@ -261,9 +253,9 @@ def test_s3_ring_bit_identical_to_fused_and_host(sedov):
     results must be bit-identical, not merely allclose."""
     st, dt, ref = sedov
     n = CFG.n_subgrids
-    dev = HydroStrategyRunner(CFG, AggregationConfig(
+    dev = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="s3", max_aggregated=n, launch_watermark=10**9))
-    host = HydroStrategyRunner(CFG, AggregationConfig(
+    host = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="s3", max_aggregated=n, launch_watermark=10**9,
         staging="host"))
     out_dev = dev.rk3_step(st.u, dt)
@@ -274,8 +266,8 @@ def test_s3_ring_bit_identical_to_fused_and_host(sedov):
 
 def test_s2_scatter_ring_bit_identical_to_fused(sedov):
     st, dt, ref = sedov
-    s2 = HydroStrategyRunner(CFG, AggregationConfig(strategy="s2",
-                                                    n_executors=2))
+    s2 = StrategyRunner(UniformSedovScenario(CFG),
+                        AggregationConfig(strategy="s2", n_executors=2))
     out = s2.rk3_step(st.u, dt)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     assert s2.stats["kernel_launches"] == 3 * CFG.n_subgrids
@@ -287,15 +279,16 @@ def test_s3_launch_counts_greedy_on_hydro(sedov):
     for max_agg in (3, n, 2 * n):
         agg = AggregationConfig(strategy="s3", max_aggregated=max_agg,
                                 launch_watermark=10**9)
-        r = HydroStrategyRunner(CFG, agg)
+        r = StrategyRunner(UniformSedovScenario(CFG), agg)
         r.rhs(st.u)
-        assert r._agg_exec.stats["launches"] == _greedy_launches(
+        assert r.executor.stats["launches"] == greedy_launches(
             n, agg.bucket_sizes())
 
 
 def test_trajectory_scan_matches_step_loop(sedov):
     st, dt, _ = sedov
-    r = HydroStrategyRunner(CFG, AggregationConfig(strategy="fused"))
+    r = StrategyRunner(UniformSedovScenario(CFG),
+                       AggregationConfig(strategy="fused"))
     loop = st.u
     for _ in range(2):
         loop = r.rk3_step(loop, dt)
@@ -322,7 +315,7 @@ def test_global_trajectory_matches_step_loop(sedov):
 
 def test_staging_stats_accounted(sedov):
     st, dt, _ = sedov
-    r = HydroStrategyRunner(CFG, AggregationConfig(
+    r = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
         strategy="s3", max_aggregated=CFG.n_subgrids,
         launch_watermark=10**9))
     r.rhs(st.u)
