@@ -22,7 +22,7 @@ import os
 from typing import List
 
 import jax
-from bench_util import WM, hist_deltas, region_hists
+from bench_util import WM, hist_deltas, region_hists, time_per_step
 
 from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
 from repro.configs.base import AggregationConfig
@@ -52,14 +52,13 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
         r.rk3_step(state, dt)                # compile remaining programs
         r.stats["kernel_launches"] = 0
         warm_hists = region_hists(r)
-        best = float("inf")
-        for _ in range(repeats):
-            best = min(best, r.time_step(state, dt, steps))
+        sec, samples = time_per_step(r.rk3_step, state, dt, steps, repeats)
         launches = r.stats["kernel_launches"] / (steps * repeats)
         regions = hist_deltas(region_hists(r), warm_hists)
         rows.append({
             "config": tag,
-            "ms_per_step": round(best * 1e3, 3),
+            "ms_per_step": round(sec * 1e3, 3),
+            "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,

@@ -3,13 +3,47 @@
 The aggregation executor's counters are cumulative and include the warm
 (compile) step, while the benchmark rows report per-timed-step values —
 these helpers snapshot/diff the per-family bucket histograms so every
-sweep's JSON stays internally consistent.
+sweep's JSON stays internally consistent.  ``time_per_step`` is the shared
+timing loop: it reports the MEDIAN of per-repeat mean step times (this box
+shows ±20% run-to-run variance on identical programs; a single mean or a
+best-of hides that, the median with the raw samples alongside does not).
 """
 from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, List, Tuple
+
+import jax
 
 # launch watermark that never fires: sweeps pin the greedy bucket drain so
 # launch counts measure aggregation policy, not idle-detection timing
 WM = 10 ** 9
+
+
+def time_per_step(step_fn: Callable, state, dt, steps: int,
+                  repeats: int) -> Tuple[float, List[float]]:
+    """Median-of-repeats seconds per step, plus the raw per-repeat samples
+    (each sample is one repeat's mean over ``steps`` steps)."""
+    samples = []
+    for _ in range(repeats):
+        out = state
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            out = step_fn(out, dt)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / steps)
+    return statistics.median(samples), samples
+
+
+def region_ladders(runner) -> dict:
+    """Per-family bucket ladders of a runner's aggregation executor (the
+    auto-tuner's output surface; empty without an executor)."""
+    if runner.executor is None:
+        return {}
+    return {k: list(v.get("ladder", []))
+            for k, v in runner.executor.stats["regions"].items()}
 
 
 def region_hists(runner) -> dict:

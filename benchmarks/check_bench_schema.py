@@ -24,6 +24,39 @@ ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
 TOP_KEYS = ("benchmark", "backend", "config", "steps", "repeats", "rows")
 ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
 
+# optional per-row observability fields (launch_overhead ladder sweep):
+# validated for shape whenever present, required on *_ladder* rows
+OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists")
+
+
+def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
+    problems = []
+    samples = row.get("ms_per_step_samples")
+    if samples is not None and not (
+            isinstance(samples, list)
+            and all(isinstance(s, (int, float)) for s in samples)):
+        problems.append(f"{path}: rows[{i}] 'ms_per_step_samples' must be "
+                        f"a list of numbers")
+    ladder = row.get("ladder")
+    if ladder is not None and not (
+            isinstance(ladder, dict)
+            and all(isinstance(v, list)
+                    and all(isinstance(b, int) and b > 0 for b in v)
+                    for v in ladder.values())):
+        problems.append(f"{path}: rows[{i}] 'ladder' must map family -> "
+                        f"list of positive bucket sizes")
+    hists = row.get("region_hists")
+    if hists is not None and not (
+            isinstance(hists, dict)
+            and all(isinstance(v, dict) for v in hists.values())):
+        problems.append(f"{path}: rows[{i}] 'region_hists' must map "
+                        f"family -> bucket histogram")
+    if "ladder" in str(row.get("config", "")) and (ladder is None
+                                                   or hists is None):
+        problems.append(f"{path}: rows[{i}] is a ladder-sweep row but "
+                        f"lacks 'ladder'/'region_hists'")
+    return problems
+
 
 def check_file(path: str) -> List[str]:
     problems = []
@@ -48,6 +81,7 @@ def check_file(path: str) -> List[str]:
         for key in ROW_KEYS:
             if key not in row:
                 problems.append(f"{path}: rows[{i}] missing {key!r}")
+        problems.extend(_check_optional_row(path, i, row))
     return problems
 
 

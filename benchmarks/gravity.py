@@ -23,7 +23,7 @@ import os
 from typing import List
 
 import jax
-from bench_util import WM, hist_deltas, region_hists
+from bench_util import WM, hist_deltas, region_hists, time_per_step
 
 from repro.configs.base import AggregationConfig
 from repro.configs.gravity import CONFIG, CONFIG_SMALL
@@ -53,16 +53,15 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
         r.stats["kernel_launches"] = 0
         warm_fams = dict(r.launches_by_family)
         warm_hists = region_hists(r)
-        best = float("inf")
-        for _ in range(repeats):
-            best = min(best, r.time_step(st.u, dt, steps))
+        sec, samples = time_per_step(r.rk3_step, st.u, dt, steps, repeats)
         launches = r.stats["kernel_launches"] / (steps * repeats)
         by_family = {k: (v - warm_fams.get(k, 0)) / (steps * repeats)
                      for k, v in r.launches_by_family.items()}
         regions = hist_deltas(region_hists(r), warm_hists)
         rows.append({
             "config": tag,
-            "ms_per_step": round(best * 1e3, 3),
+            "ms_per_step": round(sec * 1e3, 3),
+            "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
             "launches_by_family_per_step": by_family,
             "n_families": len(regions) or None,

@@ -13,8 +13,15 @@ The ``*_seed`` rows reproduce the seed implementation exactly — s2 as
 ``subs[i:i+1]`` slicing + per-iteration ``jnp.concatenate``, s3 as
 ``staging="host"`` (slice -> host-stack -> launch) — so the perf trajectory
 of the slot-ring rework is measurable from this PR onward.  The ``fused_scan``
-row is the new upper bound: whole RK3 trajectories as ONE ``lax.scan``
-program.
+row is the upper bound: whole RK3 trajectories as ONE ``lax.scan`` program.
+
+The aggregated rows (``s3_slotring`` / ``s2s3_slotring``) run the DESIGN.md
+§9 hot path: one bulk ``submit_range`` per wave, auto-tuned bucket ladders,
+and epilogue-fused mega-buckets (chunked body evaluation picked by timed
+warmup).  The ``s3_ladder{16,32,64,auto}`` sweep varies only the ladder cap,
+recording each row's final per-family ladder and timed-window bucket
+histograms.  All wall times are MEDIANS of per-repeat means (raw samples
+ride along in the JSON).
 
   PYTHONPATH=src python benchmarks/launch_overhead.py [--full] [--steps N]
 
@@ -25,12 +32,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import time
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-from bench_util import WM
+from bench_util import WM, hist_deltas, region_hists, region_ladders, \
+    time_per_step
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import StrategyRunner, UniformSedovScenario
@@ -116,21 +125,6 @@ class SeedS3Runner:
         return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
 
 
-def _time_runner(step_fn, u, dt, steps: int, repeats: int = 1) -> float:
-    """Best-of-``repeats`` mean step time (min filters scheduler noise —
-    this box shows ±20% run-to-run variance on identical programs)."""
-    best = float("inf")
-    for _ in range(repeats):
-        out = u
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            out = step_fn(out, dt)
-        jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / steps)
-    return best
-
-
 def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     cfg = HydroConfig(subgrid=8, ghost=3, levels=levels)
     st = sedov_init(cfg)
@@ -138,8 +132,9 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     n = cfg.n_subgrids
     rows = []
 
-    def record(tag, sec, launches, staging_s, dispatch_s: Optional[float]):
-        rows.append({
+    def record(tag, sec, launches, staging_s, dispatch_s: Optional[float],
+               samples=None, ladder=None, hists=None):
+        row = {
             "config": tag, "n_subgrids": n,
             "ms_per_step": round(sec * 1e3, 3),
             "launches_per_step": launches,
@@ -147,9 +142,16 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
             else round(staging_s * 1e3 / steps, 3),
             "dispatch_ms_per_step": None if dispatch_s is None
             else round(dispatch_s * 1e3 / steps, 3),
-        })
-        print(f"  {tag:24s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
-              f"staging {rows[-1]['staging_ms_per_step']} ms")
+        }
+        if samples is not None:
+            row["ms_per_step_samples"] = [round(s * 1e3, 3) for s in samples]
+        if ladder is not None:
+            row["ladder"] = ladder
+        if hists is not None:
+            row["region_hists"] = hists
+        rows.append(row)
+        print(f"  {tag:24s} {row['ms_per_step']:9.2f} ms/step  "
+              f"staging {row['staging_ms_per_step']} ms")
 
     # -- seed baselines ---------------------------------------------------
     seed2 = SeedS2Runner(cfg, n_executors=4)
@@ -157,9 +159,10 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     seed2.staging_s = 0.0
     for e in seed2.pool.executors:
         e.dispatch_s = 0.0
-    sec = _time_runner(seed2.rk3_step, st.u, dt, steps, repeats)
+    sec, samples = time_per_step(seed2.rk3_step, st.u, dt, steps, repeats)
     record("s2_seed_hoststage", sec, 3 * n,
-           seed2.staging_s / repeats, seed2.pool.total_dispatch_s / repeats)
+           seed2.staging_s / repeats, seed2.pool.total_dispatch_s / repeats,
+           samples=samples)
 
     # launch_watermark is pinned high on the s3 A/B rows so both staging
     # modes drain with the IDENTICAL greedy bucket sequence — watermark
@@ -176,50 +179,78 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
         seed3.exe.stats["launches"] = 0
         for e in seed3.exe.pool.executors:
             e.dispatch_s = 0.0
-        sec = _time_runner(seed3.rk3_step, st.u, dt, steps, repeats)
+        sec, samples = time_per_step(seed3.rk3_step, st.u, dt, steps,
+                                     repeats)
         record(tag, sec,
                seed3.exe.stats["launches"] // (steps * repeats),
                (seed3.staging_s + seed3.exe.stats["staging_s"]) / repeats,
-               seed3.exe.pool.total_dispatch_s / repeats)
+               seed3.exe.pool.total_dispatch_s / repeats, samples=samples)
 
-    for tag, strat, n_exec, max_agg, wm in [
-        ("s2_slotring", "s2", 4, 1, 1),
-        ("s3_slotring", "s3", 1, 16, WM),
-        ("s2s3_slotring", "s2+s3", 4, 16, WM),
-        ("fused_bound", "fused", 1, 1, 1),
-    ]:
+    # -- the DESIGN.md §9 hot path + ladder sweep -------------------------
+    # s3/s2+s3 rows run bulk submission + epilogue-fused mega-buckets with
+    # chunked evaluation; the ladder sweep varies only the bucket cap.
+    # "auto" rows let the per-region tuner re-derive the ladder from the
+    # observed queue-length histogram (warmup waves) — a steady n-task wave
+    # converges on one bucket-n launch per stage.
+    agg_rows = [
+        ("s2_slotring", "s2", 4, dict(max_aggregated=1, launch_watermark=1)),
+        ("s3_slotring", "s3", 1,
+         dict(max_aggregated=n, launch_watermark=WM, autotune=True,
+              inner_chunk="auto", fuse_epilogue=True)),
+        ("s2s3_slotring", "s2+s3", 4,
+         dict(max_aggregated=n, launch_watermark=WM, autotune=True,
+              inner_chunk="auto", fuse_epilogue=True)),
+        ("fused_bound", "fused", 1,
+         dict(max_aggregated=1, launch_watermark=1)),
+    ]
+    for cap in (16, 32, 64):
+        agg_rows.append((f"s3_ladder{cap}", "s3", 1,
+                         dict(max_aggregated=cap, launch_watermark=WM,
+                              inner_chunk="auto", fuse_epilogue=True)))
+    agg_rows.append(("s3_ladder_auto", "s3", 1,
+                     dict(max_aggregated=n, launch_watermark=WM,
+                          autotune=True, inner_chunk="auto",
+                          fuse_epilogue=True)))
+    scn = UniformSedovScenario(cfg)   # shared: one body, one chunk tuning
+    for tag, strat, n_exec, knobs in agg_rows:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
-                                max_aggregated=max_agg, staging="device",
-                                launch_watermark=wm)
-        r = StrategyRunner(UniformSedovScenario(cfg), agg)
+                                staging="device", **knobs)
+        r = StrategyRunner(scn, agg)
+        r.warmup(wave_only=True)      # AOT wave buckets + chunk selection
         r.rk3_step(st.u, dt)                      # warmup/compile
+        warm_hists = region_hists(r)
         r.stats["staging_s"] = 0.0
         if r.executor is not None:
             r.executor.stats["staging_s"] = 0.0
             r.executor.stats["launches"] = 0
         for e in r.pool.executors:
             e.dispatch_s = 0.0
-        sec = _time_runner(r.rk3_step, st.u, dt, steps, repeats)
+        sec, samples = time_per_step(r.rk3_step, st.u, dt, steps, repeats)
         staging_s = (r.executor.stats["staging_s"]
                      if r.executor is not None else 0.0)
         launches = (3 * n if strat == "s2"
                     else 3 if strat == "fused"
                     else r.executor.stats["launches"] // (steps * repeats))
+        aggregated = r.executor is not None
         record(tag, sec, launches, staging_s / repeats,
-               r.pool.total_dispatch_s / repeats)
+               r.pool.total_dispatch_s / repeats, samples=samples,
+               ladder=region_ladders(r) if aggregated else None,
+               hists=(hist_deltas(region_hists(r), warm_hists)
+                      if aggregated else None))
 
     # -- scan trajectory: whole multi-step RK3 as one program -------------
     r = StrategyRunner(UniformSedovScenario(cfg),
                        AggregationConfig(strategy="fused"))
     r.rk3_trajectory(st.u, dt, steps)             # warmup/compile
-    best = float("inf")
+    samples = []
     for _ in range(repeats):
         jax.block_until_ready(st.u)
         t0 = time.perf_counter()
         out = r.rk3_trajectory(st.u, dt, steps)
         jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / steps)
-    record("fused_scan_bound", best, 1.0 / steps, 0.0, None)
+        samples.append((time.perf_counter() - t0) / steps)
+    record("fused_scan_bound", statistics.median(samples), 1.0 / steps,
+           0.0, None, samples=samples)
     return rows
 
 

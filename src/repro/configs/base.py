@@ -170,16 +170,71 @@ class AggregationConfig:
     # "host"   — the seed's slice -> host-stack -> launch cycle (kept as the
     #            measurable baseline for benchmarks/launch_overhead.py).
     staging: str = "device"
+    # Per-region ladder auto-tuning (DESIGN.md §9): after ``autotune_warmup``
+    # complete waves, each region re-derives its bucket ladder from the
+    # observed queue-length histogram, minimizing expected launches per wave
+    # under an AOT-compile budget of ``compile_budget`` distinct bucket
+    # programs (bucket 1 is always kept: no-padding invariant).
+    autotune: bool = False
+    autotune_warmup: int = 2          # complete waves per region before retune
+    compile_budget: int = 4           # max distinct bucket sizes per ladder
+    # Mega-bucket evaluation: a bucketed program evaluates its body over the
+    # slot axis in sequential chunks of ``inner_chunk`` slots (one lax.map
+    # inside ONE launch) instead of one flat vmap.  0 = flat; "auto" = timed
+    # selection at warmup.  Chunked evaluation is bit-identical to flat
+    # (elementwise batch split; tests pin it) but keeps the working set of
+    # stencil-heavy bodies cache-sized, which is what lets one bucket-64
+    # launch beat 64 per-task launches.
+    inner_chunk: object = 0           # int, or "auto"
+    # Epilogue fusion (DESIGN.md §9): strategies that implement ``run_stage``
+    # drive RK stages through each family's epilogue-fused twin (gather ->
+    # body -> stage update as ONE program per bucket) when the scenario
+    # declares per-slot epilogues.  Off by default: the fused path is
+    # bit-identical to its own fused reference but reassociates ~1e-5
+    # relative to the eager global stage arithmetic.
+    fuse_epilogue: bool = False
 
     def bucket_sizes(self) -> Tuple[int, ...]:
         if self.buckets:
-            return self.buckets
+            return validate_ladder(self.buckets, self.max_aggregated)
         out, b = [], 1
         while b < self.max_aggregated:
             out.append(b)
             b *= 2
         out.append(self.max_aggregated)
         return tuple(dict.fromkeys(out))
+
+
+def validate_ladder(buckets, cap: int) -> Tuple[int, ...]:
+    """Validate a custom bucket ladder: positive ints, deduped, sorted
+    ascending, containing 1, none above the ``max_aggregated`` cap.
+
+    Bucket 1 is non-negotiable: the greedy drain covers any queue length k
+    exactly only if a remainder of 1 has a bucket — a ladder like (4, 8)
+    with 3 queued tasks would otherwise launch a 4-bucket over one garbage
+    slot (the ``_largest_bucket`` over-launch bug this guard exists for).
+    """
+    b = tuple(int(x) for x in buckets)
+    problems = []
+    if any(x <= 0 for x in b):
+        problems.append("all bucket sizes must be positive")
+    if len(set(b)) != len(b):
+        problems.append("bucket sizes must be unique")
+    if list(b) != sorted(b):
+        problems.append("bucket sizes must be sorted ascending")
+    if 1 not in b:
+        problems.append(
+            "the ladder must contain bucket size 1 — the greedy drain "
+            "needs it to cover remainders exactly (no padding, no launch "
+            "over garbage slots)")
+    if b and max(b) > cap:
+        problems.append(
+            f"bucket {max(b)} exceeds max_aggregated={cap} and could "
+            f"never launch — raise max_aggregated or drop the bucket")
+    if problems:
+        raise ValueError(
+            f"invalid bucket ladder {buckets!r}: " + "; ".join(problems))
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +373,7 @@ class GravityHydroConfig:
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "ParallelConfig", "AggregationConfig",
+    "validate_ladder",
     "HydroConfig", "AMRHydroConfig", "GravityHydroConfig",
     "ALL_SHAPES", "SHAPES_BY_NAME",
     "shape_applicable",

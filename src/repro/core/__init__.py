@@ -14,14 +14,15 @@
                     through one executor
 """
 from repro.core.aggregation import (
-    AggregationExecutor, SlotView, TaskFuture, TaskSignature,
-    aggregation_region, gather_futures, reset_regions,
+    AggregationExecutor, RangeFuture, SlotView, TaskFuture, TaskSignature,
+    aggregation_region, derive_ladder, gather_futures, greedy_launches,
+    reset_regions,
 )
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
 from repro.core.scenario import (
     AMRSedovScenario, GravityScenario, KernelFamily, Scenario,
-    TaskPopulation, UniformSedovScenario, xla_task_body,
+    TaskPopulation, UniformSedovScenario, stage_family, xla_task_body,
 )
 from repro.core.strategies import (
     AMRStrategyRunner, HydroStrategyRunner, RunContext, Strategy,
@@ -29,10 +30,11 @@ from repro.core.strategies import (
 )
 
 __all__ = [
-    "AggregationExecutor", "SlotView", "TaskFuture", "TaskSignature",
-    "aggregation_region", "gather_futures", "reset_regions",
+    "AggregationExecutor", "RangeFuture", "SlotView", "TaskFuture",
+    "TaskSignature", "aggregation_region", "derive_ladder", "gather_futures",
+    "greedy_launches", "reset_regions",
     "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
-    "Scenario", "KernelFamily", "TaskPopulation",
+    "Scenario", "KernelFamily", "TaskPopulation", "stage_family",
     "UniformSedovScenario", "AMRSedovScenario", "GravityScenario",
     "Strategy", "RunContext", "StrategyRunner",
     "available_strategies", "register_strategy",

@@ -58,6 +58,14 @@ from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import ExecutorPool
 
 
+# inner-chunk auto-tune memo: (body id, bucket, task specs) -> (body, chunk).
+# Keeping the body ref in the value pins its id() for the key's lifetime
+# (an id-keyed entry without the ref would collide on id reuse); the cache
+# is FIFO-bounded so long-lived sweeps don't pin every body ever tuned.
+_CHUNK_TUNE_MEMO: Dict[Tuple, Tuple[Any, int]] = {}
+_CHUNK_TUNE_MEMO_MAX = 32
+
+
 class TaskFuture:
     """HPX-future analogue: resolves to one task's slice of a batched launch.
 
@@ -92,46 +100,100 @@ class TaskFuture:
         return self._value
 
 
-def gather_futures(futs: Sequence[TaskFuture]) -> Any:
-    """Assemble many futures' results into one batched array, lazily.
+class RangeFuture:
+    """One future for a contiguous range of ``count`` tasks (the bulk-
+    submission analogue of :class:`TaskFuture`).
 
-    Futures fulfilled by the same launch share one batched output; a run of
-    such futures in slot order contributes the batch itself (zero-copy).
-    Out-of-order runs become a single ``jnp.take``; distinct launches are
-    joined with one ``jnp.concatenate``.  This replaces the seed's
-    per-future slice + re-stack (2n device ops for n tasks) with O(launches)
-    ops.
-
-    Futures may interleave launches from different regions freely — runs
-    are grouped by launch identity — but all results must share one output
-    task-shape to concatenate; gather each family separately otherwise.
+    A range enters the queue as ONE entry; the greedy drain may still split
+    it across several bucketed launches, so fulfilment is segmented: each
+    launch contributes ``(range_offset, batch, slot, n)``.  ``result()``
+    assembles the full ``(count, ...)`` batch — zero-copy when one launch
+    covered the whole range in order, which is the steady-state fast path
+    (``submit_range`` of a full wave -> one mega-bucket launch -> the
+    launch output IS the result).
     """
-    if not futs:
-        raise ValueError("gather_futures needs at least one future")
+
+    __slots__ = ("_parts", "_count", "_value")
+
+    def __init__(self, count: int):
+        self._parts: List[Tuple[int, Any, int, int]] = []
+        self._count = count
+        self._value = None
+
+    def __len__(self) -> int:
+        return self._count
+
+    def _fulfil_range(self, batch_out: Any, slot: int, offset: int,
+                      n: int) -> None:
+        self._parts.append((offset, batch_out, slot, n))
+
+    def ready(self) -> bool:
+        if self._value is not None:     # resolved (parts were released)
+            return True
+        return sum(p[3] for p in self._parts) == self._count
+
+    def result(self) -> Any:
+        """The whole range as one batched pytree (task axis leading)."""
+        if self._value is None:
+            if not self.ready():
+                raise RuntimeError(
+                    "range not fully launched yet — call executor.flush()")
+            self._value = _assemble_segments(
+                [(batch, slot, n)
+                 for _, batch, slot, n in sorted(self._parts,
+                                                 key=lambda p: p[0])])
+            self._parts = []
+        return self._value
+
+    def _segments(self):
+        if self._value is not None:
+            leaves = jax.tree_util.tree_leaves(self._value)
+            yield self._value, 0, leaves[0].shape[0]
+            return
+        if not self.ready():
+            raise RuntimeError(
+                "range not fully launched yet — call executor.flush()")
+        for _, batch, slot, n in sorted(self._parts, key=lambda p: p[0]):
+            yield batch, slot, n
+
+
+def _assemble_segments(segments: List[Tuple[Any, int, int]]) -> Any:
+    """Merge ``(batch, start_slot, n)`` runs into one batched pytree.
+
+    Consecutive runs on the same launch output coalesce; a run covering a
+    whole launch in order contributes the batch itself (zero-copy), a
+    contiguous partial run is one slice, anything else one ``jnp.take``.
+    """
     parts = []
     i = 0
-    while i < len(futs):
-        f = futs[i]
-        if not f._done:
-            raise RuntimeError("task not launched yet — call executor.flush()")
-        if f._batch is None:          # already resolved individually
-            parts.append(jax.tree_util.tree_map(lambda x: x[None], f.result()))
-            i += 1
-            continue
-        batch = f._batch
-        slots = []
-        while i < len(futs) and futs[i]._batch is batch:
-            slots.append(futs[i]._slot)
+    while i < len(segments):
+        batch = segments[i][0]
+        runs = []                                  # [(start, n)] on `batch`
+        while i < len(segments) and segments[i][0] is batch:
+            s0, n = segments[i][1], segments[i][2]
+            if runs and runs[-1][0] + runs[-1][1] == s0:
+                runs[-1] = (runs[-1][0], runs[-1][1] + n)
+            else:
+                runs.append((s0, n))
             i += 1
         n_slots = jax.tree_util.tree_leaves(batch)[0].shape[0]
-        if slots == list(range(n_slots)):
+        if runs == [(0, n_slots)]:
             parts.append(batch)       # the whole launch, in order: zero-copy
+        elif len(runs) == 1:
+            s0, n = runs[0]
+            parts.append(jax.tree_util.tree_map(
+                lambda x: jax.lax.slice_in_dim(x, s0, s0 + n, axis=0), batch))
         else:
-            idx = jnp.asarray(slots, jnp.int32)
+            idx = jnp.asarray([s for s0, n in runs
+                               for s in range(s0, s0 + n)], jnp.int32)
             parts.append(jax.tree_util.tree_map(
                 lambda x: jnp.take(x, idx, axis=0), batch))
     if len(parts) == 1:
         return parts[0]
+    return _concat_parts(parts)
+
+
+def _concat_parts(parts: List[Any]) -> Any:
     task_specs = {tuple((tuple(x.shape[1:]), np.dtype(x.dtype).str)
                         for x in jax.tree_util.tree_leaves(p))
                   for p in parts}
@@ -141,6 +203,48 @@ def gather_futures(futs: Sequence[TaskFuture]) -> Any:
             f"shapes/dtypes {sorted(task_specs)} — gather each family "
             f"separately")
     return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *parts)
+
+
+def gather_futures(futs: Sequence[Any]) -> Any:
+    """Assemble many futures' results into one batched array, lazily.
+
+    Futures fulfilled by the same launch share one batched output; a run of
+    such futures in slot order contributes the batch itself (zero-copy).
+    Out-of-order runs become a single ``jnp.take``; distinct launches are
+    joined with one ``jnp.concatenate``.  This replaces the seed's
+    per-future slice + re-stack (2n device ops for n tasks) with O(launches)
+    ops.
+
+    ``TaskFuture`` and ``RangeFuture`` entries may be interleaved freely (a
+    range contributes its launch segments in range order), as may launches
+    from different regions — but all results must share one output
+    task-shape to concatenate; gather each family separately otherwise.
+    """
+    if not futs:
+        raise ValueError("gather_futures needs at least one future")
+    segments: List[Tuple[Any, int, int]] = []
+    parts = []
+
+    def emit_segments():
+        if segments:
+            parts.append(_assemble_segments(segments))
+            segments.clear()
+
+    for f in futs:
+        if isinstance(f, RangeFuture):
+            segments.extend(f._segments())
+            continue
+        if not f._done:
+            raise RuntimeError("task not launched yet — call executor.flush()")
+        if f._batch is None:          # already resolved individually
+            emit_segments()
+            parts.append(jax.tree_util.tree_map(lambda x: x[None], f.result()))
+        else:
+            segments.append((f._batch, f._slot, 1))
+    emit_segments()
+    if len(parts) == 1:
+        return parts[0]
+    return _concat_parts(parts)
 
 
 class SlotView:
@@ -198,10 +302,117 @@ class TaskSignature:
 
 @dataclass
 class _Pending:
-    future: TaskFuture
+    future: Any                                   # TaskFuture | RangeFuture
     slot: int = -1                               # ring mode: slot in the ring
     views: Optional[Tuple[SlotView, ...]] = None  # ref mode
     args: Optional[Tuple[Any, ...]] = None        # host mode
+    count: int = 1                    # tasks in this entry (>1: slot range)
+    fut_offset: int = 0               # this entry's offset in its RangeFuture
+
+    def split(self, n: int) -> Tuple["_Pending", "_Pending"]:
+        """Split a contiguous range entry: first ``n`` tasks / the rest.
+        Both halves share the future (each fulfils its own offset)."""
+        assert 0 < n < self.count and self.views is not None
+        head = _Pending(future=self.future, views=self.views, count=n,
+                        fut_offset=self.fut_offset)
+        tail = _Pending(
+            future=self.future,
+            views=tuple(SlotView(v.parent, v.index + n) for v in self.views),
+            count=self.count - n, fut_offset=self.fut_offset + n)
+        return head, tail
+
+
+def greedy_decomposition(k: int, buckets: Sequence[int]) -> Tuple[int, ...]:
+    """The bucket sequence the greedy drain launches for a queue of length
+    k under a valid ladder (every bucket <= the cap by validation, so this
+    models over-cap waves too: a 100-task wave under cap 64 is 64 + the
+    greedy cover of 36).  Shared by the launch path, the ladder tuner and
+    wave-only warmup — one definition of "what will actually launch"."""
+    out = []
+    while k:
+        b = max(x for x in buckets if x <= k)
+        out.append(b)
+        k -= b
+    return tuple(out)
+
+
+def greedy_launches(k: int, buckets: Sequence[int]) -> int:
+    """Launches the greedy drain performs for a queue of length k under a
+    valid ladder (shared oracle; tests mirror it in conftest.py)."""
+    return len(greedy_decomposition(k, buckets))
+
+
+def derive_ladder(queue_hist: Mapping[int, int], cap: int,
+                  budget: int) -> Tuple[int, ...]:
+    """Re-derive a bucket ladder from an observed queue-length histogram.
+
+    Starting from the mandatory ``{1}`` (the no-padding invariant needs a
+    remainder bucket) seeded with the dominant wave's cap-decomposition
+    (a single candidate search cannot learn that the cap bucket is only
+    worth having TOGETHER with its remainder — e.g. a 100-task wave under
+    cap 64 wants {64, 36} as a pair), greedily add the candidate size —
+    observed wave peaks, clipped to the cap, their cap-split remainders,
+    plus powers of two — that most reduces the expected launches per
+    wave, until ``budget`` distinct bucket programs are reached or no
+    candidate improves.  A steady k-task wave therefore converges on a
+    ladder covering k exactly: one launch per cap-chunk, no ones-drain.
+    """
+    candidates = set()
+    for k in queue_hist:
+        if k <= 0:
+            continue
+        candidates.add(min(k, cap))
+        if k > cap and k % cap:
+            candidates.add(k % cap)   # the cap-split remainder of the wave
+    b = 1
+    while b <= cap:
+        candidates.add(b)
+        b *= 2
+
+    def cost(ladder):
+        # candidate buckets never exceed the cap, so the greedy cover of
+        # the FULL wave length models the real drain (cap-splits included)
+        ls = sorted(ladder)
+        return sum(c * greedy_launches(k, ls)
+                   for k, c in queue_hist.items())
+
+    ladder = {1}
+    peaks = [k for k in queue_hist if k > 0]
+    if peaks:
+        top = max(peaks, key=lambda k: (queue_hist[k], k))
+        seed = {cap, top % cap} if top > cap else {top}
+        for b in sorted(seed - {0}, reverse=True):
+            if len(ladder) < budget:
+                ladder.add(b)
+    while len(ladder) < budget:
+        best, best_cost = None, cost(ladder)
+        for c in sorted(candidates - ladder):
+            cc = cost(ladder | {c})
+            if cc < best_cost:
+                best, best_cost = c, cc
+        if best is None:
+            break
+        ladder.add(best)
+    return tuple(sorted(ladder))
+
+
+def _chunked_eval(batched_fn: Callable, chunk: int, *stacked):
+    """Mega-bucket evaluation: run the batched body over the slot axis in
+    sequential ``chunk``-slot pieces via ONE ``lax.map`` inside the same
+    program.  Bit-identical to the flat call (a pure batch split of an
+    independent-per-slot body); the win is cache locality — stencil-heavy
+    bodies keep their intermediates resident instead of streaming a
+    bucket-64-sized working set.  Falls back to the flat call whenever the
+    chunk does not divide the bucket (no padding, ever)."""
+    k = stacked[0].shape[0] if stacked else 0
+    if chunk and 0 < chunk < k and k % chunk == 0:
+        resh = tuple(a.reshape((k // chunk, chunk) + a.shape[1:])
+                     for a in stacked)
+        out = jax.lax.map(lambda xs: batched_fn(*xs), resh)
+        return jax.tree_util.tree_map(
+            lambda o: o.reshape((o.shape[0] * o.shape[1],) + o.shape[2:]),
+            out)
+    return batched_fn(*stacked)
 
 
 class _Region:
@@ -211,33 +422,52 @@ class _Region:
     """
 
     __slots__ = ("signature", "batched_fn", "ring", "queue", "compiled",
-                 "host_jit", "gather_jit", "stats")
+                 "host_jit", "gather_jit", "stats", "buckets", "chunk",
+                 "chunk_tuned", "queued_tasks", "waves", "tuned",
+                 "_wave_peak", "_aot_parents")
 
     def __init__(self, signature: TaskSignature, batched_fn: Callable,
-                 donate: bool):
+                 donate: bool, buckets: Tuple[int, ...] = (1,),
+                 chunk: int = 0):
         self.signature = signature
         self.batched_fn = batched_fn
         self.ring: Optional[SlotRing] = None
         self.queue: List[_Pending] = []
+        self.queued_tasks = 0         # tasks queued (entries carry counts)
         self.compiled: Dict[Tuple, Callable] = {}
+        self.buckets = buckets        # per-region ladder (auto-tune target)
+        self.chunk = chunk            # mega-bucket inner chunk (0 = flat)
+        self.chunk_tuned = False      # "auto" tuning ran for this region
+        self.waves = 0                # completed waves (queue drained to 0)
+        self.tuned = False
+        self._wave_peak = 0
+        self._aot_parents: Dict[Tuple, Tuple] = {}  # pk -> parent structs
         # shared shape-polymorphic wrappers (jit re-specializes per shape,
         # so ONE wrapper serves every bucket / parent shape)
-        self.host_jit = jax.jit(batched_fn,
+        self.host_jit = jax.jit(self._apply_host,
                                 donate_argnums=(0,) if donate else ())
         self.gather_jit = jax.jit(self._apply_gathered)
-        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {}}
+        self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
+                      "queue_hist": {}, "ladder": list(buckets)}
 
     # -- bucketed programs -------------------------------------------------
+    def _eval(self, *stacked):
+        """The body over a staged bucket, chunk-aware (DESIGN.md §9)."""
+        return _chunked_eval(self.batched_fn, self.chunk, *stacked)
+
+    def _apply_host(self, *stacked):
+        return self._eval(*stacked)
+
     def _apply_gathered(self, idx, *parents):
         """Index-batched staging: one gather feeds the aggregation body."""
-        return self.batched_fn(*(jnp.take(p, idx, axis=0) for p in parents))
+        return self._eval(*(jnp.take(p, idx, axis=0) for p in parents))
 
     def _apply_ring_prefix(self, bucket: int, start, *rings):
         """Ring staging: the bucket reads a zero-copy view of the filled
         prefix [start, start+bucket) straight out of the slot ring."""
         sliced = tuple(jax.lax.dynamic_slice_in_dim(r, start, bucket, axis=0)
                        for r in rings)
-        return self.batched_fn(*sliced)
+        return self._eval(*sliced)
 
     # -- compilation cache -------------------------------------------------
     # Each bucket size is a genuinely distinct XLA program (static shapes),
@@ -260,6 +490,30 @@ class _Region:
         if self.ring is None:
             self.ring = SlotRing(capacity, example_args)
         return self.ring
+
+    # -- AOT lowering (ONE recipe shared by warmup and ladder retune, so
+    # the cache keys the _launch lookup probes are spelled out once) ------
+    def aot_ref(self, bucket: int, parents: Sequence[Any]) -> None:
+        """Pre-compile the indexed-gather + contiguous-prefix programs for
+        one bucket over one parent set (ShapeDtypeStructs)."""
+        pk = tuple(tuple(p.shape) for p in parents)
+        if ("gather", bucket, pk) not in self.compiled:
+            idx = jax.ShapeDtypeStruct((bucket,), jnp.int32)
+            self.compiled[("gather", bucket, pk)] = jax.jit(
+                self._apply_gathered).lower(idx, *parents).compile()
+        if ("prefix_aot", bucket, pk) not in self.compiled:
+            start = jax.ShapeDtypeStruct((), jnp.int32)
+            self.compiled[("prefix_aot", bucket, pk)] = jax.jit(
+                partial(self._apply_ring_prefix, bucket)).lower(
+                    start, *parents).compile()
+
+    def aot_ring(self, bucket: int, ring_specs: Sequence[Any]) -> None:
+        """Pre-compile the slot-ring prefix program for one bucket."""
+        if ("ring", bucket) not in self.compiled:
+            start = jax.ShapeDtypeStruct((), jnp.int32)
+            self.compiled[("ring", bucket)] = jax.jit(
+                partial(self._apply_ring_prefix, bucket)).lower(
+                    start, *ring_specs).compile()
 
 
 class AggregationExecutor:
@@ -301,6 +555,9 @@ class AggregationExecutor:
         self.buffers = buffer_pool or DEFAULT_POOL
         self._buckets = tuple(sorted(self.config.bucket_sizes()))
         self._donate = donate
+        ic = getattr(self.config, "inner_chunk", 0)
+        self._chunk = int(ic) if ic != "auto" else 0   # "auto": set at warmup
+        self._chunk_auto = ic == "auto"
         self._staging = getattr(self.config, "staging", "device")
         if self._staging not in ("device", "host"):
             raise ValueError(f"unknown staging mode {self._staging!r}")
@@ -342,7 +599,8 @@ class AggregationExecutor:
             if body is None:
                 raise KeyError(f"no batched body registered for kernel "
                                f"{kernel!r} (have {sorted(self._bodies)})")
-            region = _Region(sig, body, self._donate)
+            region = _Region(sig, body, self._donate, buckets=self._buckets,
+                             chunk=self._chunk)
             self._regions[sig] = region
             self.stats["regions"][sig.describe()] = region.stats
         return region
@@ -408,7 +666,8 @@ class AggregationExecutor:
     # -- warmup ------------------------------------------------------------
     def warmup(self, example_args: Optional[Tuple[Any, ...]] = None, *,
                kernel: Optional[str] = None,
-               parent_shapes: Optional[Sequence[Any]] = None) -> None:
+               parent_shapes: Optional[Sequence[Any]] = None,
+               buckets: Optional[Sequence[int]] = None) -> None:
         """AOT pre-compile every bucket size (amortized startup, like stream
         pre-allocation in CPPuddle).
 
@@ -419,12 +678,21 @@ class AggregationExecutor:
         * ``example_args`` — per-task example inputs; pre-compiles the slot
           ring (device staging) or host-stacked (host staging) buckets.
         * ``parent_shapes`` — shapes/dtypes of the parent arrays that
-          ``submit_indexed`` will reference (arrays or ShapeDtypeStructs);
-          pre-compiles the indexed-gather AND contiguous-prefix programs
-          those submissions hit, closing the gather-mode warmup gap
-          (DESIGN.md §6 -> §7).
+          ``submit_indexed``/``submit_range`` will reference (arrays or
+          ShapeDtypeStructs); pre-compiles the indexed-gather AND
+          contiguous-prefix programs those submissions hit, closing the
+          gather-mode warmup gap (DESIGN.md §6 -> §7).
+
+        ``buckets`` restricts which ladder buckets are AOT-compiled (e.g.
+        just the steady wave's greedy decomposition — the caller's compile
+        budget); default is the region's whole ladder.  Un-warmed buckets
+        still compile lazily on first use.
         """
         kernel = self._resolve_kernel(kernel)
+
+        def aot_buckets(region):
+            return region.buckets if buckets is None else tuple(buckets)
+
         if parent_shapes is not None:
             parents = tuple(jax.ShapeDtypeStruct(tuple(p.shape), p.dtype)
                             for p in parent_shapes)
@@ -432,15 +700,12 @@ class AggregationExecutor:
                                for p in parents)
             region = self._region_for(kernel, task_specs)
             pk = tuple(tuple(p.shape) for p in parents)
-            start = jax.ShapeDtypeStruct((), jnp.int32)
+            region._aot_parents[pk] = parents    # retune re-AOTs from these
+            if self._chunk_auto and not region.chunk_tuned:
+                self._tune_chunk(region, parents)
             n_parent = min(p.shape[0] for p in parents)
-            for b in (b for b in self._buckets if b <= n_parent):
-                idx = jax.ShapeDtypeStruct((b,), jnp.int32)
-                region.compiled[("gather", b, pk)] = jax.jit(
-                    region._apply_gathered).lower(idx, *parents).compile()
-                region.compiled[("prefix_aot", b, pk)] = jax.jit(
-                    partial(region._apply_ring_prefix, b)).lower(
-                        start, *parents).compile()
+            for b in (b for b in aot_buckets(region) if b <= n_parent):
+                region.aot_ref(b, parents)
             if example_args is None:
                 return
         if example_args is None:
@@ -450,23 +715,76 @@ class AggregationExecutor:
                                       getattr(a, "dtype", None)
                                       or jnp.asarray(a).dtype)
                  for a in example_args]
-        start = jax.ShapeDtypeStruct((), jnp.int32)
+        if self._chunk_auto and not region.chunk_tuned:
+            # ring/host-staged regions tune too: a pseudo-parent of the
+            # largest bucket's stacked shape drives the same measurement
+            pseudo = tuple(jax.ShapeDtypeStruct(
+                (max(region.buckets),) + s.shape, s.dtype) for s in specs)
+            self._tune_chunk(region, pseudo)
         if self._staging == "device":
             ring = region.ensure_ring(self.config.max_aggregated,
                                       example_args)
             ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
                           for r in ring.buffers()]
-            for b in self._buckets:
-                fn = jax.jit(partial(region._apply_ring_prefix, b))
-                region.compiled[("ring", b)] = fn.lower(
-                    start, *ring_specs).compile()
+            for b in aot_buckets(region):
+                region.aot_ring(b, ring_specs)
         else:
-            for b in self._buckets:
+            for b in aot_buckets(region):
                 stacked = tuple(
                     jax.ShapeDtypeStruct((b,) + s.shape, s.dtype)
                     for s in specs)
                 region.compiled[("host", b)] = region.host_jit.lower(
                     *stacked).compile()
+
+    def _tune_chunk(self, region: _Region, parents: Sequence[Any]) -> None:
+        """``inner_chunk="auto"``: pick the region's mega-bucket chunk by
+        timing the body on its largest bucket over candidate chunk sizes
+        (0 = flat, then powers of two).  Runs once per region, before any
+        bucket program is compiled, so every compiled program sees the
+        chosen chunk.  This is a measurement, not a lowering — warmup with
+        "auto" executes a handful of zero-filled buckets.  Results are
+        memoized per (body, bucket shape), so re-tuning the same family in
+        another executor (a benchmark sweep) is free."""
+        n_parent = min(p.shape[0] for p in parents)
+        b = max((x for x in region.buckets if x <= n_parent), default=0)
+        if b < 2:
+            return
+        key = (id(region.batched_fn), b,
+               tuple((tuple(p.shape[1:]), str(p.dtype)) for p in parents))
+        memo = _CHUNK_TUNE_MEMO.get(key)
+        if memo is not None:
+            region.chunk = memo[1]
+            region.chunk_tuned = True
+            region.stats["inner_chunk"] = memo[1]
+            return
+        stacked = tuple(jnp.zeros((b,) + tuple(p.shape[1:]), p.dtype)
+                        for p in parents)
+        best_chunk, best_t = 0, float("inf")
+        for c in (0, 2, 4, 8):
+            if c >= b or (c and b % c):
+                continue
+            fn = jax.jit(partial(_chunked_eval, region.batched_fn, c))
+            try:
+                jax.block_until_ready(fn(*stacked))    # compile + warm
+            except Exception:
+                continue                               # body rejects chunking
+            # min-of-3 guards the choice against scheduler hiccups — the
+            # memo pins it process-wide, so one noisy sample must not
+            # lock in a pessimal chunk (~3.5x between best and worst here)
+            t = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*stacked))
+                t = min(t, time.perf_counter() - t0)
+            if t < best_t:
+                best_chunk, best_t = c, t
+        # the memo holds a ref to the body so id() stays valid for the key
+        while len(_CHUNK_TUNE_MEMO) >= _CHUNK_TUNE_MEMO_MAX:
+            _CHUNK_TUNE_MEMO.pop(next(iter(_CHUNK_TUNE_MEMO)))
+        _CHUNK_TUNE_MEMO[key] = (region.batched_fn, best_chunk)
+        region.chunk = best_chunk
+        region.chunk_tuned = True
+        region.stats["inner_chunk"] = best_chunk
 
     # -- submission API ----------------------------------------------------
     def submit(self, *args, kernel: Optional[str] = None) -> TaskFuture:
@@ -505,12 +823,53 @@ class AggregationExecutor:
                     p.slot -= first
             entry = _Pending(future=fut, slot=ring.write(args))
             self.stats["staging_s"] += time.perf_counter() - t0
+        self._enqueue(region, entry)
+        return fut
+
+    def submit_range(self, parents: Tuple[jax.Array, ...], start: int,
+                     n: int, kernel: Optional[str] = None) -> RangeFuture:
+        """Bulk submission: enqueue tasks ``start .. start+n-1`` of a parent
+        set as ONE queue entry backed by ONE :class:`RangeFuture`.
+
+        Replaces n ``submit_indexed`` calls (n ``TaskFuture`` allocations, n
+        signature routings, n queue appends) with one of each — the
+        submission loop stops being a per-task Python cost.  The range may
+        still drain across several bucketed launches (greedy, in order);
+        ``result()``/``gather_futures`` reassemble it, zero-copy in the
+        steady one-launch case.  Launch criteria see all n tasks at once, so
+        a full wave triggers its mega-bucket immediately on submission.
+        """
+        if n <= 0:
+            raise ValueError(f"submit_range needs n >= 1, got {n}")
+        if self._staging != "device":
+            raise ValueError(
+                "submit_range requires device staging — ranges reference "
+                "device-resident parents by slot index (use per-task "
+                "submit() under staging='host')")
+        kernel = self._resolve_kernel(kernel)
+        n_parent = min(p.shape[0] for p in parents)
+        if start < 0 or start + n > n_parent:
+            # XLA's dynamic_slice/take CLAMP out-of-bounds indices instead
+            # of failing — an unchecked range would silently return data
+            # from the wrong slots
+            raise ValueError(
+                f"range [{start}, {start + n}) out of bounds for parents "
+                f"with {n_parent} slots")
+        views = tuple(SlotView(p, start) for p in parents)
+        region = self._region_for_views(kernel, views)
+        fut = RangeFuture(n)
+        entry = _Pending(future=fut, views=views, count=n)
+        self._enqueue(region, entry)
+        return fut
+
+    def _enqueue(self, region: _Region, entry: _Pending) -> None:
         self._check_mode(region, entry)
         region.queue.append(entry)
-        self.stats["submitted"] += 1
-        region.stats["submitted"] += 1
+        region.queued_tasks += entry.count
+        region._wave_peak = max(region._wave_peak, region.queued_tasks)
+        self.stats["submitted"] += entry.count
+        region.stats["submitted"] += entry.count
         self._maybe_launch()
-        return fut
 
     def submit_indexed(self, parents: Tuple[jax.Array, ...], index: int,
                        kernel: Optional[str] = None) -> TaskFuture:
@@ -531,7 +890,9 @@ class AggregationExecutor:
                              for a, b in zip(head.views, entry.views))
         if not compatible:
             while region.queue:
-                self._launch(region, self._largest_bucket(len(region.queue)))
+                self._launch(region,
+                             self._largest_bucket(region,
+                                                  region.queued_tasks))
 
     @staticmethod
     def _entry_mode(entry: _Pending) -> str:
@@ -550,30 +911,63 @@ class AggregationExecutor:
         while progress:
             progress = False
             for region in self._regions.values():
-                q = len(region.queue)
+                q = region.queued_tasks
                 if q >= self.config.max_aggregated:
-                    self._launch(region, self.config.max_aggregated)
+                    self._launch(region,
+                                 self._largest_bucket(
+                                     region, self.config.max_aggregated))
                     progress = True
                 elif (q >= self.config.launch_watermark
                       and self.pool.any_idle()):
-                    self._launch(region, self._largest_bucket(q))
+                    self._launch(region, self._largest_bucket(region, q))
                     progress = True
 
-    def _largest_bucket(self, k: int) -> int:
-        best = self._buckets[0]
-        for b in self._buckets:
+    @staticmethod
+    def _largest_bucket(region: _Region, k: int) -> int:
+        best = region.buckets[0]
+        for b in region.buckets:
             if b <= k:
                 best = b
+        if best > k:
+            raise RuntimeError(
+                f"bucket {best} exceeds queue length {k} — ladder "
+                f"{region.buckets} lacks a remainder bucket (validate_ladder "
+                f"should have rejected it)")
         return best
 
+    def _take(self, region: _Region, k: int) -> List[_Pending]:
+        """Pop k tasks' worth of entries off the queue, splitting a range
+        entry at the bucket boundary (both halves share the RangeFuture)."""
+        taken: List[_Pending] = []
+        need = k
+        while need:
+            e = region.queue[0]
+            if e.count <= need:
+                taken.append(region.queue.pop(0))
+                need -= e.count
+            else:
+                head, tail = e.split(need)
+                region.queue[0] = tail
+                taken.append(head)
+                need = 0
+        region.queued_tasks -= k
+        return taken
+
     def _launch(self, region: _Region, k: int) -> None:
-        tasks, region.queue = region.queue[:k], region.queue[k:]
+        tasks = self._take(region, k)
         mode = self._entry_mode(tasks[0])
         t0 = time.perf_counter()
         if mode == "ref":
-            indices = [t.views[0].index for t in tasks]
+            indices: List[int] = []
+            for t in tasks:
+                i0 = t.views[0].index
+                indices.extend(range(i0, i0 + t.count))
             parents = tuple(v.parent for v in tasks[0].views)
             pk = tuple(tuple(p.shape) for p in parents)
+            if pk not in region._aot_parents:    # remember for retune AOT
+                region._aot_parents[pk] = tuple(
+                    jax.ShapeDtypeStruct(tuple(p.shape), p.dtype)
+                    for p in parents)
             if indices == list(range(indices[0], indices[0] + k)):
                 # contiguous slot run: one dynamic slice of the parent (the
                 # parent IS the ring) — no gather, no index array
@@ -603,8 +997,13 @@ class AggregationExecutor:
         self.stats["staging_s"] += time.perf_counter() - t0
         exe = self.pool.get()
         out = exe.launch(fn, *call_args, family=region.signature.kernel)
-        for slot, t in enumerate(tasks):
-            t.future._fulfil(out, slot)
+        slot = 0
+        for t in tasks:
+            if isinstance(t.future, RangeFuture):
+                t.future._fulfil_range(out, slot, t.fut_offset, t.count)
+            else:
+                t.future._fulfil(out, slot)
+            slot += t.count
         if mode == "ring" and not region.queue:
             region.ring.swap()    # in-flight launch keeps the old buffer
         self.stats["launches"] += 1
@@ -613,6 +1012,68 @@ class AggregationExecutor:
         region.stats["launches"] += 1
         rhist = region.stats["aggregated_hist"]
         rhist[k] = rhist.get(k, 0) + 1
+        if not region.queue:
+            self._wave_complete(region)
+
+    # -- ladder auto-tuning ------------------------------------------------
+    def _wave_complete(self, region: _Region) -> None:
+        """A wave ended (queue drained to zero): record its peak queue
+        length and, past the warmup, re-derive the region's ladder."""
+        peak = region._wave_peak
+        if peak:
+            qh = region.stats["queue_hist"]
+            qh[peak] = qh.get(peak, 0) + 1
+            region.waves += 1
+            region._wave_peak = 0
+            if region.tuned and peak > max(region.buckets):
+                # the workload outgrew the learned ladder (e.g. warmup saw
+                # only watermark-drained micro-waves, then a bulk range
+                # arrived): re-arm the tuner instead of pinning the small
+                # ladder forever
+                region.tuned = False
+        if (self.config.autotune and not region.tuned
+                and region.waves >= self.config.autotune_warmup):
+            self._retune_region(region)
+
+    def _retune_region(self, region: _Region) -> None:
+        """Swap in the ladder minimizing expected launches per observed
+        wave (AOT-compiling the new buckets for every parent set seen), as
+        the AMR follow-up work does once launch overhead stops dominating."""
+        ladder = derive_ladder(region.stats["queue_hist"],
+                               self.config.max_aggregated,
+                               self.config.compile_budget)
+        region.tuned = True
+        if ladder == region.buckets:
+            return
+        region.buckets = ladder
+        region.stats["ladder"] = list(ladder)
+        # AOT only the buckets the observed waves will actually drain
+        # through under the new ladder (the compile budget, honored)
+        used = set()
+        for k in region.stats["queue_hist"]:
+            used.update(greedy_decomposition(k, ladder))
+        if region.ring is not None:       # ring-staged regions retune too
+            ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
+                          for r in region.ring.buffers()]
+            for b in sorted(used):
+                region.aot_ring(b, ring_specs)
+        # (host staging keeps lazy per-shape jit — it is the measurable
+        # seed baseline, not a tuned hot path)
+        for parents in region._aot_parents.values():
+            n_parent = min(p.shape[0] for p in parents)
+            for b in (b for b in sorted(used) if b <= n_parent):
+                region.aot_ref(b, parents)
+
+    def retune(self) -> Dict[str, Tuple[int, ...]]:
+        """Force a ladder retune of every region from the queue-length
+        histograms observed so far; returns the ladders by family."""
+        out = {}
+        for region in self._regions.values():
+            region.tuned = False
+            if region.stats["queue_hist"]:
+                self._retune_region(region)
+            out[region.signature.describe()] = region.buckets
+        return out
 
     def flush(self) -> None:
         """Launch everything still queued (greedy buckets) and drain.
@@ -623,7 +1084,8 @@ class AggregationExecutor:
             for region in live:
                 if region.queue:
                     self._launch(region,
-                                 self._largest_bucket(len(region.queue)))
+                                 self._largest_bucket(region,
+                                                      region.queued_tasks))
             live = [r for r in live if r.queue]
         self.pool.drain()
         # the routing cache holds strong refs to the last wave's parent

@@ -39,7 +39,7 @@ from repro.hydro.state import (
     sync_coarse,
 )
 from repro.hydro.stepper import (
-    level_batched_body, level_batched_jit, subgrid_rhs,
+    level_batched_body, level_batched_jit, rk_stage_epilogue, subgrid_rhs,
 )
 from repro.kernels.gravity import gravity_batched_body, gravity_batched_jit
 
@@ -55,11 +55,37 @@ class KernelFamily:
     """One aggregable kernel family: the ``TaskSignature`` kernel id, its
     batched body ``(*stacked_args) -> stacked_out`` (leading slot axis on
     every arg/out), and optionally a pre-jitted twin (so scenario,
-    reference and fused strategy share ONE compiled program)."""
+    reference and fused strategy share ONE compiled program).
+
+    ``epilogue`` optionally declares a PER-SLOT epilogue
+    ``epilogue(body_out_slot, *extra_slots) -> slot_out`` (e.g. the RK-stage
+    axpy) that :func:`stage_family` traces *into* the bucketed program: the
+    derived family's batched body is ``vmap(epilogue)(batched_body(*main),
+    *extras)``, so gather -> body -> stage update compiles to ONE XLA
+    program per bucket while submission stays task-granular (DESIGN.md §9).
+    """
 
     kernel: str
     batched_body: Callable
     jit_body: Optional[Callable] = None
+    epilogue: Optional[Callable] = None
+
+
+def stage_family(fam: KernelFamily, n_body_args: int) -> KernelFamily:
+    """Derive the epilogue-fused twin of a family: same aggregation
+    substrate, bigger body.  The first ``n_body_args`` of a submission feed
+    the body; the rest (per-slot extras, incl. per-task coefficient
+    vectors) feed the vmapped epilogue.  Works with any batched body — the
+    Pallas kernels included — because composition happens at the batched
+    level."""
+    if fam.epilogue is None:
+        raise ValueError(f"family {fam.kernel!r} declares no epilogue")
+
+    def batched(*args):
+        out = fam.batched_body(*args[:n_body_args])
+        return jax.vmap(fam.epilogue)(out, *args[n_body_args:])
+
+    return KernelFamily(fam.kernel + "+epi", batched, jax.jit(batched))
 
 
 @dataclass(frozen=True)
@@ -74,6 +100,13 @@ class TaskPopulation:
     @property
     def n_tasks(self) -> int:
         return self.parents[0].shape[0]
+
+    def submit_to(self, executor):
+        """Bulk-submit the whole population as ONE contiguous range entry
+        (one ``RangeFuture``) — the population-level fast path over n
+        per-task ``submit_indexed`` calls."""
+        return executor.submit_range(self.parents, 0, self.n_tasks,
+                                     kernel=self.kernel)
 
 
 class Scenario:
@@ -110,6 +143,40 @@ class Scenario:
     def warmup_parent_specs(self) -> Tuple[Tuple[str, Tuple[Any, ...]], ...]:
         return ()
 
+    # -- optional: epilogue-fused RK stages (DESIGN.md §9) -----------------
+    def stage_families(self) -> Tuple[KernelFamily, ...]:
+        """Epilogue-fused twins of the families that declare one; empty when
+        the scenario does not support fused stages."""
+        return ()
+
+    def stage_populations(self, u0, v, dt, c0,
+                          c1) -> Optional[Tuple[TaskPopulation, ...]]:
+        """Submission waves whose launches produce the NEXT RK stage state
+        per slot: ``out = c0*u0 + c1*(v + dt*rhs(v))`` (Shu-Osher form;
+        stage 1 is ``c0=0, c1=1``).  ``None`` = not supported — the runner
+        falls back to rhs() + global combine."""
+        return None
+
+    def assemble_stage(self, state, outs: Sequence[Any]):
+        """Per-population stage outputs -> the next stage's state pytree."""
+        raise NotImplementedError
+
+    def stage_warmup_parent_specs(self):
+        """Like ``warmup_parent_specs`` for the stage families' waves."""
+        return ()
+
+    def reference_stage(self, u0, v, dt, c0, c1):
+        """Bit-exact fused reference for one epilogue-fused RK stage: ONE
+        jitted launch of each stage family through the same assemble path.
+        The oracle the aggregated stage path must match bit-identically —
+        same traced composition, only the batch decomposition differs."""
+        pops = self.stage_populations(u0, v, dt, c0, c1)
+        if pops is None:
+            raise NotImplementedError(
+                f"scenario {self.name!r} declares no stage populations")
+        outs = [self.jitted_body(p.kernel)(*p.parents) for p in pops]
+        return self.assemble_stage(v, outs)
+
     # -- provided ----------------------------------------------------------
     def finalize_step(self, state):
         """Post-RK3-combine hook; identity unless levels need re-syncing."""
@@ -118,7 +185,8 @@ class Scenario:
     def family(self, kernel: str) -> KernelFamily:
         cache = getattr(self, "_family_by_kernel", None)
         if cache is None:
-            cache = {f.kernel: f for f in self.families()}
+            cache = {f.kernel: f
+                     for f in self.families() + tuple(self.stage_families())}
             self._family_by_kernel = cache
         return cache[kernel]
 
@@ -166,7 +234,10 @@ class UniformSedovScenario(Scenario):
         self.body = body or xla_task_body(cfg, self.h)
         self.batched_body = batched_body or jax.vmap(self.body)
         self.name = cfg.name
-        self._families = (KernelFamily("hydro_rhs", self.batched_body),)
+        self._dtype = jnp.dtype(cfg.dtype)
+        self._families = (KernelFamily("hydro_rhs", self.batched_body,
+                                       epilogue=rk_stage_epilogue),)
+        self._stage_families = (stage_family(self._families[0], 1),)
 
     def families(self):
         return self._families
@@ -185,6 +256,56 @@ class UniformSedovScenario(Scenario):
         spec = jax.ShapeDtypeStruct(
             (cfg.n_subgrids, cfg.n_fields, p, p, p), jnp.dtype(cfg.dtype))
         return (("hydro_rhs", (spec,)),)
+
+    # -- epilogue-fused RK stages (DESIGN.md §9) ---------------------------
+    def stage_families(self):
+        return self._stage_families
+
+    def stage_populations(self, u0, v, dt, c0, c1):
+        cfg = self.cfg
+        subs = extract_subgrids(v, cfg.subgrid, cfg.ghost, self.bc)
+        v_int = extract_subgrids(v, cfg.subgrid, 0, self.bc)
+        # u0 is invariant across a step's three stages (and IS v in stage
+        # 1): extract its interior once per step, not once per stage
+        if v is u0:
+            u0_int = v_int
+            self._u0_int_cache = (u0, u0_int)
+        else:
+            cache = getattr(self, "_u0_int_cache", None)
+            if cache is None or cache[0] is not u0:
+                cache = (u0, extract_subgrids(u0, cfg.subgrid, 0, self.bc))
+                self._u0_int_cache = cache
+            u0_int = cache[1]
+        n = subs.shape[0]
+        # (c0, c1, dt) repeat every step at fixed dt: reuse the broadcast
+        # vectors instead of dispatching three jnp.full per stage
+        cache = getattr(self, "_coeff_cache", None)
+        if cache is None:
+            cache = self._coeff_cache = {}
+        key = (c0, c1, n)
+        hit = cache.get(key)
+        if hit is None or hit[0] is not dt:
+            hit = (dt, tuple(jnp.full((n,), c, self._dtype)
+                             for c in (c0, c1, dt)))
+            cache[key] = hit
+        return (TaskPopulation(
+            self._stage_families[0].kernel,
+            (subs, v_int, u0_int) + hit[1]),)
+
+    def assemble_stage(self, state, outs):
+        return assemble_global(outs[0], self.cfg.subgrid)
+
+    def stage_warmup_parent_specs(self):
+        cfg = self.cfg
+        p, s, n = cfg.padded, cfg.subgrid, cfg.n_subgrids
+        dtype = jnp.dtype(cfg.dtype)
+        f = cfg.n_fields
+        scalar = jax.ShapeDtypeStruct((n,), dtype)
+        return ((self._stage_families[0].kernel, (
+            jax.ShapeDtypeStruct((n, f, p, p, p), dtype),
+            jax.ShapeDtypeStruct((n, f, s, s, s), dtype),
+            jax.ShapeDtypeStruct((n, f, s, s, s), dtype),
+            scalar, scalar, scalar)),)
 
 
 # ---------------------------------------------------------------------------

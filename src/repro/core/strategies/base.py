@@ -77,3 +77,11 @@ class Strategy:
     def run_iteration(self, scenario, state, ctx: RunContext):
         """One solver iteration: launch every population, assemble d(state)."""
         raise NotImplementedError
+
+    def run_stage(self, scenario, u0, v, dt, c0, c1, ctx: RunContext):
+        """One epilogue-fused RK stage: launch the scenario's stage
+        populations (gather -> body -> stage axpy as ONE program per
+        bucket) and return the next stage's state.  ``None`` = this
+        strategy has no fused-stage path; the runner falls back to
+        ``run_iteration`` + the global combine."""
+        return None

@@ -21,3 +21,15 @@ class FusedStrategy(Strategy):
             outs.append(scenario.jitted_body(pop.kernel)(*pop.parents))
             ctx.stats["kernel_launches"] += 1
         return scenario.assemble(state, outs)
+
+    def run_stage(self, scenario, u0, v, dt, c0, c1, ctx: RunContext):
+        """The fused stage IS the scenario's bit-exact stage reference
+        (one jitted launch of each epilogue-fused family)."""
+        pops = scenario.stage_populations(u0, v, dt, c0, c1)
+        if pops is None:
+            return None
+        outs = []
+        for pop in pops:
+            outs.append(scenario.jitted_body(pop.kernel)(*pop.parents))
+            ctx.stats["kernel_launches"] += 1
+        return scenario.assemble_stage(v, outs)

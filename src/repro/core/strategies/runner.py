@@ -14,6 +14,7 @@ Strategy names are validated against the plugin registry at CONSTRUCTION
 from __future__ import annotations
 
 import time
+import warnings
 from functools import partial
 from typing import Any, Callable, Dict, Optional
 
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import (
     AMRHydroConfig, AggregationConfig, HydroConfig,
 )
-from repro.core.aggregation import AggregationExecutor
+from repro.core.aggregation import AggregationExecutor, greedy_decomposition
 from repro.core.executor import ExecutorPool
 from repro.core.scenario import (
     AMRSedovScenario, Scenario, UniformSedovScenario,
@@ -58,9 +59,23 @@ class StrategyRunner:
                 None, agg, pool=self.pool, name=scenario.name)
             for fam in scenario.families():
                 self._agg_exec.register(fam.kernel, fam.batched_body)
+            for fam in scenario.stage_families():
+                self._agg_exec.register(fam.kernel, fam.batched_body)
             self.stats["regions"] = self._agg_exec.stats["regions"]
         self.ctx = RunContext(config=agg, pool=self.pool,
                               executor=self._agg_exec, stats=self.stats)
+        # epilogue-fused RK stages (DESIGN.md §9): opt-in via config, only
+        # when the scenario declares stage populations AND the strategy
+        # overrides run_stage AND staging is device-resident — deciding
+        # here (not at the first step) keeps warmup() warming the families
+        # the run will actually launch
+        from repro.core.strategies.base import Strategy as _StrategyBase
+        strategy_has_stage = (type(self._strategy).run_stage
+                              is not _StrategyBase.run_stage)
+        self._fuse_epilogue = (getattr(agg, "fuse_epilogue", False)
+                               and bool(scenario.stage_families())
+                               and strategy_has_stage
+                               and agg.staging != "host")
         self._traj_cache: Dict[int, Callable] = {}
 
     # -- observability -----------------------------------------------------
@@ -74,20 +89,38 @@ class StrategyRunner:
         return self.pool.launches_by_family
 
     # -- warmup ------------------------------------------------------------
-    def warmup(self) -> None:
+    def warmup(self, wave_only: bool = False) -> None:
         """AOT pre-compile every family's gather/prefix buckets from the
         parent shapes the scenario's submission waves will reference
-        (shape-agreeing waves are deduplicated)."""
+        (shape-agreeing waves are deduplicated).
+
+        ``wave_only=True`` restricts AOT to the buckets a full wave's greedy
+        decomposition uses (the steady state under a pinned watermark) —
+        the benchmark's compile budget; other buckets compile lazily.  When
+        the epilogue-fused stage path is active, only the stage families
+        are warmed — the plain families never launch on that path.
+        """
         if self._agg_exec is None:
             return
+        if self._fuse_epilogue:
+            specs = tuple(self.scenario.stage_warmup_parent_specs())
+        else:
+            specs = tuple(self.scenario.warmup_parent_specs())
         seen = set()
-        for kernel, parent_specs in self.scenario.warmup_parent_specs():
+        for kernel, parent_specs in specs:
             key = (kernel, tuple((tuple(p.shape), str(p.dtype))
                                  for p in parent_specs))
             if key in seen:
                 continue
             seen.add(key)
-            self._agg_exec.warmup(kernel=kernel, parent_shapes=parent_specs)
+            buckets = None
+            if wave_only:
+                ladder = self._agg_exec.config.bucket_sizes()
+                wave = min(p.shape[0] for p in parent_specs)
+                buckets = tuple(sorted(set(greedy_decomposition(wave,
+                                                                ladder))))
+            self._agg_exec.warmup(kernel=kernel, parent_shapes=parent_specs,
+                                  buckets=buckets)
 
     # -- one solver iteration ----------------------------------------------
     def rhs(self, state):
@@ -96,6 +129,10 @@ class StrategyRunner:
 
     # -- RK3 (three iterations per time-step, as in the paper) -------------
     def rk3_step(self, state, dt):
+        if self._fuse_epilogue:
+            out = self._rk3_step_fused_stages(state, dt)
+            if out is not None:
+                return out
         tm = jax.tree_util.tree_map
         l0 = self.rhs(state)
         u1 = tm(lambda u, l: u + dt * l, state, l0)
@@ -106,6 +143,25 @@ class StrategyRunner:
         out = tm(lambda u, a, l: (1.0 / 3.0) * u + (2.0 / 3.0) * (a + dt * l),
                  state, u2, l2)
         return self.scenario.finalize_step(out)
+
+    def _rk3_step_fused_stages(self, state, dt):
+        """RK3 through the epilogue-fused stage path: each Shu-Osher stage
+        is one submission wave of the scenario's stage families — gather,
+        body and stage axpy in ONE program per bucket (DESIGN.md §9).
+        Returns None (falling back to the generic path) when the strategy
+        has no ``run_stage``."""
+        stage = self._strategy.run_stage
+        sc = self.scenario
+        u1 = stage(sc, state, state, dt, 0.0, 1.0, self.ctx)
+        if u1 is None:
+            self._fuse_epilogue = False       # strategy has no stage path
+            return None
+        self.stats["iterations"] += 1
+        u2 = stage(sc, state, u1, dt, 0.75, 0.25, self.ctx)
+        self.stats["iterations"] += 1
+        out = stage(sc, state, u2, dt, 1.0 / 3.0, 2.0 / 3.0, self.ctx)
+        self.stats["iterations"] += 1
+        return sc.finalize_step(out)
 
     # -- whole-trajectory scan driver (fused upper bound) ------------------
     def _trajectory_impl(self, n_steps: int, state, dt):
@@ -170,6 +226,10 @@ class StrategyRunner:
 def HydroStrategyRunner(cfg: HydroConfig, agg: AggregationConfig,
                         bc: str = "outflow", body=None, batched_body=None):
     """Deprecated: ``StrategyRunner(UniformSedovScenario(cfg), agg)``."""
+    warnings.warn(
+        "HydroStrategyRunner is deprecated — use "
+        "StrategyRunner(UniformSedovScenario(cfg), agg)",
+        DeprecationWarning, stacklevel=2)
     return StrategyRunner(UniformSedovScenario(cfg, bc=bc, body=body,
                                                batched_body=batched_body), agg)
 
@@ -177,4 +237,8 @@ def HydroStrategyRunner(cfg: HydroConfig, agg: AggregationConfig,
 def AMRStrategyRunner(cfg: AMRHydroConfig, agg: AggregationConfig,
                       bc: str = "outflow"):
     """Deprecated: ``StrategyRunner(AMRSedovScenario(cfg), agg)``."""
+    warnings.warn(
+        "AMRStrategyRunner is deprecated — use "
+        "StrategyRunner(AMRSedovScenario(cfg), agg)",
+        DeprecationWarning, stacklevel=2)
     return StrategyRunner(AMRSedovScenario(cfg, bc=bc), agg)

@@ -2,23 +2,28 @@
 multi-region ``AggregationExecutor``.
 
 Tasks from ALL of the scenario's populations are submitted **interleaved**
-(round-robin across kernel families, slot order within each family) into
-ONE executor: the region registry routes each task by ``TaskSignature`` to
-its family's slot ring / queue / bucket ladder, so heterogeneous families
+into ONE executor: the region registry routes each task by ``TaskSignature``
+to its family's slot ring / queue / bucket ladder, so heterogeneous families
 — coarse+fine AMR levels, or the hydro and gravity solvers — aggregate
-concurrently instead of serializing.  Populations that SHARE a kernel
-(e.g. two AMR levels with equal sub-grid shapes) submit sequentially
-within their family's round-robin turn: a launch gathers from one parent
-set, so alternating their parents task-by-task would shatter every bucket
-via the executor's parent-switch flush.  ``s2+s3`` is the same strategy
-over a multi-executor pool (the paper's best rows).
+concurrently instead of serializing.  Device staging submits each population
+as ONE bulk range entry (``TaskPopulation.submit_to`` ->
+``AggregationExecutor.submit_range``): the per-task Python loop — n
+``TaskFuture`` allocations, n signature routings, n queue appends per wave —
+collapses to one queue entry per family backed by one ``RangeFuture``, and
+``gather_futures`` hands the full-range batch back zero-copy.  Populations
+that SHARE a kernel (e.g. two AMR levels with equal sub-grid shapes) submit
+their ranges sequentially: a launch gathers from one parent set, so the
+executor's parent-switch flush keeps each population's buckets whole.
+``s2+s3`` is the same strategy over a multi-executor pool (the paper's best
+rows).
 
-Inputs stage by slot index (``submit_indexed``: one gather or prefix slice
-per launch over the already-device-resident parents, DESIGN.md §3); the
-seed's slice -> host-stack -> launch cycle survives as ``staging="host"``
-so benchmarks/launch_overhead.py can measure the win.  Stats report
-per-call DELTAS — the executor's own counters are cumulative, so the wave
-is snapshotted around the submissions.
+The seed's slice -> host-stack -> launch cycle survives as
+``staging="host"`` (per-task submissions, measurable baseline for
+benchmarks/launch_overhead.py).  When the scenario declares per-slot
+epilogues, ``run_stage`` drives whole RK stages through the epilogue-fused
+twin families (DESIGN.md §9).  Stats report per-call DELTAS — the
+executor's own counters are cumulative, so the wave is snapshotted around
+the submissions.
 """
 from __future__ import annotations
 
@@ -34,13 +39,17 @@ class S3Strategy(Strategy):
     name = "s3"
     uses_executor = True
 
-    def run_iteration(self, scenario, state, ctx: RunContext):
-        exe = ctx.executor
-        pops = scenario.populations(state)
-        before_launches = exe.stats["launches"]
-        before_staging = exe.stats["staging_s"]
-        host = ctx.config.staging == "host"
+    def _submit_populations(self, exe, pops, host: bool):
+        """One wave: bulk range per population (device staging), round-robin
+        per-task interleave across families (host staging)."""
         futs = [[] for _ in pops]
+        if not host:
+            # one range entry per population; same-kernel populations stay
+            # contiguous by construction (each range is one entry)
+            for pi, pop in enumerate(pops):
+                if pop.n_tasks:
+                    futs[pi].append(pop.submit_to(exe))
+            return futs
         # flatten each kernel family's populations into one ordered task
         # list, then round-robin one submission per family per turn
         lanes = {}
@@ -55,14 +64,13 @@ class S3Strategy(Strategy):
                 if nxt is None:
                     continue
                 pi, pop, i = nxt
-                if host:
-                    futs[pi].append(exe.submit(
-                        *(par[i] for par in pop.parents), kernel=pop.kernel))
-                else:
-                    futs[pi].append(exe.submit_indexed(pop.parents, i,
-                                                       kernel=pop.kernel))
+                futs[pi].append(exe.submit(
+                    *(par[i] for par in pop.parents), kernel=pop.kernel))
                 live.append(cur)
             cursors = live
+        return futs
+
+    def _drain(self, scenario, exe, pops, futs):
         exe.flush()
         # a population may legitimately be empty this iteration (dynamic
         # task structure, e.g. a refinement level with no patches): hand
@@ -75,7 +83,33 @@ class S3Strategy(Strategy):
                 spec = jax.eval_shape(
                     scenario.family(pop.kernel).batched_body, *pop.parents)
                 outs.append(jnp.zeros(spec.shape, spec.dtype))
+        return outs
+
+    def run_iteration(self, scenario, state, ctx: RunContext):
+        exe = ctx.executor
+        pops = scenario.populations(state)
+        before_launches = exe.stats["launches"]
+        before_staging = exe.stats["staging_s"]
+        futs = self._submit_populations(exe, pops,
+                                        host=ctx.config.staging == "host")
+        outs = self._drain(scenario, exe, pops, futs)
         ctx.stats["staging_s"] += exe.stats["staging_s"] - before_staging
         ctx.stats["kernel_launches"] += (exe.stats["launches"]
                                          - before_launches)
         return scenario.assemble(state, outs)
+
+    def run_stage(self, scenario, u0, v, dt, c0, c1, ctx: RunContext):
+        if ctx.config.staging == "host":
+            return None                  # baseline path stays per-task
+        pops = scenario.stage_populations(u0, v, dt, c0, c1)
+        if pops is None:
+            return None
+        exe = ctx.executor
+        before_launches = exe.stats["launches"]
+        before_staging = exe.stats["staging_s"]
+        futs = self._submit_populations(exe, pops, host=False)
+        outs = self._drain(scenario, exe, pops, futs)
+        ctx.stats["staging_s"] += exe.stats["staging_s"] - before_staging
+        ctx.stats["kernel_launches"] += (exe.stats["launches"]
+                                         - before_launches)
+        return scenario.assemble_stage(v, outs)

@@ -58,6 +58,21 @@ def level_batched_jit(gamma: float, ghost: int, subgrid: int):
     return jax.jit(level_batched_body(gamma, ghost, subgrid))
 
 
+def rk_stage_epilogue(dudt, v_int, u0_int, c0, c1, dt):
+    """The per-slot RK-stage epilogue (DESIGN.md §9): one Shu-Osher stage
+    update over a task's interior, ``out = c0*u0 + c1*(v + dt*dudt)``
+    (stage 1 is ``c0=0, c1=1``; stages 2/3 are ``0.75,0.25`` / ``1/3,2/3``).
+
+    Declared on :class:`~repro.core.scenario.KernelFamily` so the epilogue
+    traces *into* the bucketed aggregation program: gather -> Reconstruct+
+    Flux -> stage axpy compile to ONE XLA program per bucket, and a time
+    step becomes three launches instead of three launches plus global
+    combine traffic.  Coefficients arrive as per-task traced scalars, so a
+    single compiled bucket serves all three stages.
+    """
+    return c0 * u0_int + c1 * (v_int + dt * dudt)
+
+
 def _rhs_global(u, cfg: HydroConfig, h: float, bc: str):
     subs = extract_subgrids(u, cfg.subgrid, cfg.ghost, bc)
     body = partial(subgrid_rhs, h=h, gamma=cfg.gamma,

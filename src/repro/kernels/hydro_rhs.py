@@ -212,9 +212,13 @@ def hydro_rhs_pallas(u_slots: jax.Array, *, h: Optional[float] = None,
         )(u_slots, h2d)
 
     if layout == "slot_lane":
-        # tasks on the minor (lane) axis: (F, P, P, P, slots)
+        # tasks on the minor (lane) axis: (F, P, P, P, slots).  The tile
+        # must divide the bucket; auto-tuned ladders produce non-power-of-
+        # two buckets (DESIGN.md §9), so degrade the tile instead of
+        # asserting — lane utilization drops, correctness does not.
         t = min(lane_tile, n)
-        assert n % t == 0, (n, t)
+        while n % t:
+            t -= 1
         u_t = u_slots.transpose(1, 2, 3, 4, 0)
         if h_slots is None:
             out = pl.pallas_call(

@@ -1,0 +1,413 @@
+"""DESIGN.md §9: bulk range submission, validated/auto-tuned bucket
+ladders, and epilogue-fused mega-buckets.
+
+Invariants pinned here:
+
+* a ``submit_range`` wave is ONE queue entry / ONE ``RangeFuture``, drains
+  with the exact greedy decomposition, and gathers zero-copy in the
+  steady one-launch case;
+* ladder validation rejects unsorted/duplicated/non-positive ladders and
+  any ladder missing bucket 1 (the (4, 8)-with-3-queued over-launch bug);
+* property: for ANY valid ladder and ANY queue length k the greedy drain
+  covers k exactly — no padding, no over-launch — and random
+  ``submit_range`` + ``submit_indexed`` interleavings gather
+  bit-identically to the direct computation;
+* the per-region auto-tuner converges a steady k-wave onto a ladder
+  containing k (one mega-bucket launch per wave);
+* chunked (``inner_chunk``) mega-bucket evaluation is bit-identical to
+  flat evaluation;
+* the epilogue-fused RK stage path is bit-identical across s3/s2+s3/fused
+  and to ``Scenario.reference_stage``, and the legacy runner shims emit
+  ``DeprecationWarning``.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import greedy_launches
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AggregationConfig, HydroConfig, validate_ladder
+# NOTE: greedy_launches comes from conftest — the INDEPENDENT oracle the
+# ladder tests compare the production derive_ladder/greedy code against
+# (importing repro.core's twin here would make those assertions circular)
+from repro.core import (
+    AggregationExecutor, RangeFuture, StrategyRunner, UniformSedovScenario,
+    derive_ladder, gather_futures,
+)
+from repro.hydro.state import sedov_init
+from repro.hydro.stepper import courant_dt
+
+WM = 10 ** 9
+CFG = HydroConfig(subgrid=8, ghost=3, levels=1)
+
+
+def _affine(x):
+    return 2.0 * x + 1.0
+
+
+# ---------------------------------------------------------------------------
+# ladder validation (the _largest_bucket over-launch bugfix)
+# ---------------------------------------------------------------------------
+
+def test_ladder_without_bucket_one_rejected():
+    with pytest.raises(ValueError) as ei:
+        AggregationConfig(buckets=(4, 8), max_aggregated=8).bucket_sizes()
+    assert "bucket size 1" in str(ei.value)
+    # executor construction fails fast too — a (4, 8) ladder with 3 queued
+    # tasks would otherwise launch a 4-bucket over a garbage slot
+    with pytest.raises(ValueError):
+        AggregationExecutor(jax.vmap(_affine), AggregationConfig(
+            buckets=(4, 8), max_aggregated=8))
+
+
+@pytest.mark.parametrize("bad,frag", [
+    ((1, 4, 4), "unique"),
+    ((4, 1), "sorted"),
+    ((1, 0, 2), "positive"),
+    ((1, 64), "exceeds max_aggregated"),
+])
+def test_ladder_validation_messages(bad, frag):
+    with pytest.raises(ValueError) as ei:
+        validate_ladder(bad, 32)
+    assert frag in str(ei.value)
+
+
+def test_custom_full_population_ladder_accepted():
+    agg = AggregationConfig(buckets=(1, 5, 40), max_aggregated=40)
+    assert agg.bucket_sizes() == (1, 5, 40)
+
+
+# ---------------------------------------------------------------------------
+# property: greedy drain covers any k exactly under any valid ladder
+# ---------------------------------------------------------------------------
+
+def _random_ladder(rng, cap):
+    sizes = {1} | {rng.randint(2, cap) for _ in range(rng.randint(0, 4))}
+    return tuple(sorted(sizes))
+
+
+@given(k=st.integers(1, 48), cap=st.integers(2, 48),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_any_ladder_any_queue_exact_cover_property(k, cap, seed):
+    """Greedy decomposition covers k exactly: histogram mass == k (no
+    padding), launches == the shared oracle (no over-launch)."""
+    ladder = _random_ladder(random.Random(seed), cap)
+    cfg = AggregationConfig(strategy="s3", buckets=ladder,
+                            max_aggregated=cap, launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(float(k * 3)).reshape(k, 3)
+    fut = exe.submit_range((parent,), 0, k)
+    exe.flush()
+    hist = exe.stats["aggregated_hist"]
+    assert sum(b * c for b, c in hist.items()) == k          # exact cover
+    assert all(b in ladder for b in hist)                    # ladder only
+    # greedy is bounded by the cap at every launch decision
+    expect = 0
+    q = k
+    while q:
+        q -= max(b for b in ladder if b <= min(q, cap))
+        expect += 1
+    assert exe.stats["launches"] == expect
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+@given(n=st.integers(1, 32), max_agg=st.integers(1, 16),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_range_and_indexed_interleavings_gather_bit_identical(n, max_agg,
+                                                              seed):
+    """ANY random split of a wave into ranges and per-task submissions
+    gathers bit-identically to the direct computation, in order."""
+    rng = random.Random(seed)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=max_agg,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(float(n * 2)).reshape(n, 2)
+    futs = []
+    i = 0
+    while i < n:
+        span = rng.randint(1, n - i)
+        if span > 1 and rng.random() < 0.7:
+            futs.append(exe.submit_range((parent,), i, span))
+        else:
+            span = 1
+            futs.append(exe.submit_indexed((parent,), i))
+        i += span
+    exe.flush()
+    out = gather_futures(futs)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(2.0 * parent + 1.0))
+    assert exe.stats["submitted"] == n
+
+
+# ---------------------------------------------------------------------------
+# RangeFuture semantics
+# ---------------------------------------------------------------------------
+
+def test_range_is_one_queue_entry_one_future():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(24.0).reshape(8, 3)
+    fut = exe.submit_range((parent,), 0, 8)
+    assert isinstance(fut, RangeFuture) and len(fut) == 8
+    assert len(exe._queue) == 1                 # ONE entry, not 8
+    assert exe.stats["submitted"] == 8          # but 8 tasks accounted
+    with pytest.raises(RuntimeError):
+        fut.result()                            # not launched yet
+    exe.flush()
+    assert exe.stats["aggregated_hist"] == {8: 1}
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+def test_full_wave_range_gathers_zero_copy():
+    """One range covering one launch: gather returns the launch output
+    itself — no take, no concat."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(16.0).reshape(8, 2)
+    fut = exe.submit_range((parent,), 0, 8)     # cap hit -> launches now
+    assert exe.stats["launches"] == 1
+    exe.flush()
+    out = gather_futures([fut])
+    assert out is fut.result()                  # zero-copy: the batch itself
+
+
+def test_range_split_across_buckets_reassembles_in_order():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=4,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(33.0).reshape(11, 3)
+    fut = exe.submit_range((parent,), 0, 11)
+    exe.flush()
+    assert exe.stats["aggregated_hist"] == {4: 2, 2: 1, 1: 1}
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+def test_submit_range_rejects_out_of_bounds():
+    """dynamic_slice/take CLAMP out-of-bounds indices — an unchecked range
+    would silently compute over the wrong slots, so bounds fail loudly."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(16.0).reshape(8, 2)
+    with pytest.raises(ValueError):
+        exe.submit_range((parent,), 4, 8)        # 4..11 of 8 slots
+    with pytest.raises(ValueError):
+        exe.submit_range((parent,), -1, 4)
+
+
+def test_range_future_stays_ready_after_result():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    fut = exe.submit_range((jnp.arange(8.0).reshape(4, 2),), 0, 4)
+    assert not fut.ready()
+    exe.flush()
+    assert fut.ready()
+    fut.result()
+    assert fut.ready()                           # resolution is sticky
+
+
+def test_derive_ladder_models_over_cap_waves():
+    """A wave larger than the cap drains as cap-bucket + remainder; the
+    tuner must keep a bucket covering the remainder, not score the wave
+    as one launch."""
+    ladder = derive_ladder({100: 5}, cap=64, budget=4)
+    assert greedy_launches(100, ladder) == 2     # 64 + 36
+    assert 64 in ladder and 36 in ladder
+
+
+def test_submit_range_requires_device_staging():
+    cfg = AggregationConfig(strategy="s3", staging="host",
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    with pytest.raises(ValueError):
+        exe.submit_range((jnp.zeros((4, 2)),), 0, 4)
+
+
+def test_population_submit_to_helper():
+    from repro.core import TaskPopulation
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(12.0).reshape(6, 2)
+    pop = TaskPopulation("region", (parent,))
+    fut = pop.submit_to(exe)
+    exe.flush()
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# ladder auto-tuning
+# ---------------------------------------------------------------------------
+
+def test_derive_ladder_steady_wave_converges_on_mega_bucket():
+    ladder = derive_ladder({24: 5}, cap=32, budget=4)
+    assert 1 in ladder and 24 in ladder
+    assert greedy_launches(24, ladder) == 1
+
+
+def test_derive_ladder_respects_compile_budget():
+    ladder = derive_ladder({3: 1, 7: 1, 13: 1, 24: 1, 31: 1}, cap=32,
+                           budget=3)
+    assert len(ladder) <= 3 and 1 in ladder
+
+
+def test_autotuner_retunes_after_warmup_waves():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=32,
+                            launch_watermark=WM, autotune=True,
+                            autotune_warmup=2)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(40.0).reshape(20, 2)
+    for _ in range(3):
+        exe.submit_range((parent,), 0, 20)
+        exe.flush()
+    region = next(iter(exe.regions.values()))
+    assert region.stats["queue_hist"].get(20, 0) >= 2
+    assert 20 in region.buckets                  # tuned onto the wave size
+    assert region.stats["ladder"] == list(region.buckets)
+    before = exe.stats["launches"]
+    fut = exe.submit_range((parent,), 0, 20)
+    exe.flush()
+    assert exe.stats["launches"] == before + 1   # ONE mega-bucket launch
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+def test_autotuner_rearms_when_wave_outgrows_ladder():
+    """Warmup seeing only watermark-drained micro-waves must not pin a
+    (1,) ladder forever: a later wave larger than the ladder max re-arms
+    the tuner, and the following wave drains bucketed again."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=32,
+                            launch_watermark=1, autotune=True,
+                            autotune_warmup=2)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    for i in range(3):                    # idle pool -> per-task drains
+        exe.submit(jnp.full((2,), float(i)))
+        exe.flush()
+    region = next(iter(exe.regions.values()))
+    assert region.buckets == (1,)         # tuned to the micro-waves
+    parent = jnp.arange(64.0).reshape(32, 2)
+    exe.submit_range((parent,), 0, 32)    # outgrows the ladder
+    exe.flush()
+    assert 32 in region.buckets           # re-armed and retuned
+    before = exe.stats["launches"]
+    fut = exe.submit_range((parent,), 0, 32)
+    exe.flush()
+    assert exe.stats["launches"] == before + 1   # bucketed again
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# chunked mega-bucket evaluation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [2, 4])
+def test_inner_chunk_bit_identical_on_hydro(chunk):
+    st_ = sedov_init(CFG)
+    scn = UniformSedovScenario(CFG)
+    ref = scn.reference_rhs(st_.u)
+    agg = AggregationConfig(strategy="s3", max_aggregated=CFG.n_subgrids,
+                            launch_watermark=WM, inner_chunk=chunk)
+    r = StrategyRunner(UniformSedovScenario(CFG), agg)
+    out = r.rhs(st_.u)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert r.stats["kernel_launches"] == 1       # still ONE mega-bucket
+
+
+def test_inner_chunk_non_dividing_falls_back_flat():
+    """A chunk that does not divide the bucket must not pad — the program
+    falls back to flat evaluation, bit-identically."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM, inner_chunk=3)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(14.0).reshape(7, 2)
+    fut = exe.submit_range((parent,), 0, 7)
+    exe.flush()
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# epilogue-fused RK stages
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sedov():
+    st_ = sedov_init(CFG)
+    dt = courant_dt(st_.u, CFG)
+    return st_, dt
+
+
+def test_epilogue_stage_path_bit_identical_across_strategies(sedov):
+    """s3 / s2+s3 epilogue-fused steps == the fused stage reference, bit
+    for bit (same traced composition, only batch decomposition differs)."""
+    st_, dt = sedov
+    scn = UniformSedovScenario(CFG)
+    u1 = scn.reference_stage(st_.u, st_.u, dt, 0.0, 1.0)
+    ref = scn.reference_stage(st_.u, u1, dt, 0.75, 0.25)
+    fused = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
+        strategy="fused", fuse_epilogue=True))
+    out_f = fused.rk3_step(st_.u, dt)
+    for strategy, n_exec in [("s3", 1), ("s2+s3", 2)]:
+        r = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
+            strategy=strategy, n_executors=n_exec,
+            max_aggregated=CFG.n_subgrids, launch_watermark=WM,
+            fuse_epilogue=True, inner_chunk=4))
+        out = r.rk3_step(st_.u, dt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_f))
+        # one launch per stage: the whole wave is one mega-bucket
+        assert r.stats["kernel_launches"] == 3
+        assert r.stats["iterations"] == 3
+    # intermediate stage oracle agrees with the runner decomposition
+    np.testing.assert_array_equal(
+        np.asarray(scn.reference_stage(st_.u, u1, dt, 0.75, 0.25)),
+        np.asarray(ref))
+
+
+def test_epilogue_stage_path_close_to_generic_combine(sedov):
+    """The fused-stage step reassociates (~1e-5 rel) vs the eager global
+    combine — allclose, never asserted bit-equal across the two forms."""
+    st_, dt = sedov
+    generic = StrategyRunner(UniformSedovScenario(CFG),
+                             AggregationConfig(strategy="fused"))
+    ref = generic.rk3_step(st_.u, dt)
+    r = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
+        strategy="s3", max_aggregated=CFG.n_subgrids, launch_watermark=WM,
+        fuse_epilogue=True))
+    out = r.rk3_step(st_.u, dt)
+    scale = float(np.max(np.abs(np.asarray(ref))))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5 * scale, rtol=1e-5)
+
+
+def test_s2_ignores_fuse_epilogue_and_falls_back(sedov):
+    """A strategy without run_stage silently uses the generic path."""
+    st_, dt = sedov
+    generic = StrategyRunner(UniformSedovScenario(CFG),
+                             AggregationConfig(strategy="s2"))
+    ref = generic.rk3_step(st_.u, dt)
+    r = StrategyRunner(UniformSedovScenario(CFG), AggregationConfig(
+        strategy="s2", fuse_epilogue=True))
+    out = r.rk3_step(st_.u, dt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_legacy_runner_shims_warn():
+    from repro.core import AMRStrategyRunner, HydroStrategyRunner
+    from repro.configs.amr_sedov import CONFIG as AMR_CONFIG
+    with pytest.warns(DeprecationWarning):
+        HydroStrategyRunner(CFG, AggregationConfig(strategy="fused"))
+    with pytest.warns(DeprecationWarning):
+        AMRStrategyRunner(AMR_CONFIG, AggregationConfig(strategy="fused"))
