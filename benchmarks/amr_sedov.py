@@ -38,14 +38,21 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
     st = amr_sedov_init(cfg)
     dt = amr_courant_dt(st.uc, st.uf, cfg)
     rows = []
-    for tag, strat, n_exec, max_agg in [
-        ("s2", "s2", 4, 1),
-        ("s3", "s3", 1, 16),
-        ("s2s3", "s2+s3", 4, 16),
-        ("fused_per_level", "fused", 1, 1),
+    # the *_epi rows drive the per-level epilogue-fused stage twins
+    # (DESIGN.md §10): gather -> level body (traced h) -> Shu-Osher axpy
+    # as ONE program per bucket, bit-identical to the fused stage
+    # reference (pinned in tests/test_amr.py)
+    for tag, strat, n_exec, max_agg, knobs in [
+        ("s2", "s2", 4, 1, {}),
+        ("s3", "s3", 1, 16, {}),
+        ("s2s3", "s2+s3", 4, 16, {}),
+        ("s3_epi", "s3", 1, 16, dict(fuse_epilogue=True)),
+        ("s2s3_epi", "s2+s3", 4, 16, dict(fuse_epilogue=True)),
+        ("fused_per_level", "fused", 1, 1, {}),
     ]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
-                                max_aggregated=max_agg, launch_watermark=WM)
+                                max_aggregated=max_agg, launch_watermark=WM,
+                                **knobs)
         r = StrategyRunner(AMRSedovScenario(cfg), agg)
         r.warmup()                           # AOT gather/prefix buckets
         state = (st.uc, st.uf)
@@ -60,6 +67,8 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
             "ms_per_step": round(sec * 1e3, 3),
             "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
+            "fuse_epilogue": bool(knobs.get("fuse_epilogue", False)),
+            "flush_policy": agg.flush_policy,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,
         })

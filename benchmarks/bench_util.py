@@ -55,6 +55,18 @@ def region_hists(runner) -> dict:
             for k, v in runner.executor.stats["regions"].items()}
 
 
+def region_cost_models(runner) -> dict:
+    """Per-family measured bucket-cost tables (bucket -> median ms) of a
+    runner's aggregation executor — the DESIGN.md §10 observability
+    surface.  Empty without an executor or before any measurement ran
+    (``cost_model=False`` rows)."""
+    if runner.executor is None:
+        return {}
+    return {k: {str(b): ms for b, ms in v["cost_model"].items()}
+            for k, v in runner.executor.stats["regions"].items()
+            if v.get("cost_model")}
+
+
 def hist_deltas(now: dict, warm: dict) -> dict:
     """Per-family bucket histograms over the timed region only."""
     out = {}

@@ -24,9 +24,14 @@ ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
 TOP_KEYS = ("benchmark", "backend", "config", "steps", "repeats", "rows")
 ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
 
-# optional per-row observability fields (launch_overhead ladder sweep):
-# validated for shape whenever present, required on *_ladder* rows
-OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists")
+# optional per-row observability fields (launch_overhead ladder sweep /
+# DESIGN.md §10 measured-tuning rows): validated for shape whenever
+# present; *_ladder* rows require ladder+hists, *cost* rows additionally
+# require the measured cost table and the configured flush policy
+OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists",
+                     "cost_model", "flush_policy")
+
+FLUSH_POLICIES = ("eager", "watermark", "cost")
 
 
 def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
@@ -51,10 +56,28 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
             and all(isinstance(v, dict) for v in hists.values())):
         problems.append(f"{path}: rows[{i}] 'region_hists' must map "
                         f"family -> bucket histogram")
-    if "ladder" in str(row.get("config", "")) and (ladder is None
-                                                   or hists is None):
+    cost = row.get("cost_model")
+    if cost is not None and not (
+            isinstance(cost, dict)
+            and all(isinstance(v, dict) and v
+                    and all(isinstance(ms, (int, float)) and ms >= 0
+                            for ms in v.values())
+                    for v in cost.values())):
+        problems.append(f"{path}: rows[{i}] 'cost_model' must map family "
+                        f"-> non-empty {{bucket: median ms}} table")
+    policy = row.get("flush_policy")
+    if policy is not None and policy not in FLUSH_POLICIES:
+        problems.append(f"{path}: rows[{i}] 'flush_policy' must be one of "
+                        f"{FLUSH_POLICIES}, got {policy!r}")
+    tag = str(row.get("config", ""))
+    if "ladder" in tag and (ladder is None or hists is None):
         problems.append(f"{path}: rows[{i}] is a ladder-sweep row but "
                         f"lacks 'ladder'/'region_hists'")
+    if "cost" in tag and (ladder is None or hists is None or cost is None
+                          or policy is None):
+        problems.append(f"{path}: rows[{i}] is a cost-model-tuned row but "
+                        f"lacks one of 'ladder'/'region_hists'/"
+                        f"'cost_model'/'flush_policy'")
     return problems
 
 

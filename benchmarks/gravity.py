@@ -39,14 +39,20 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
     st = sedov_init(cfg.hydro)
     dt = courant_dt(st.u, cfg.hydro)
     rows = []
-    for tag, strat, n_exec, max_agg in [
-        ("s2", "s2", 4, 1),
-        ("s3", "s3", 1, 16),
-        ("s2s3", "s2+s3", 4, 16),
-        ("fused_per_family", "fused", 1, 1),
+    # the *_epi rows drive the TWO-FAMILY epilogue-fused stage protocol
+    # (DESIGN.md §10): each RK stage submits the hydro axpy-fused twin AND
+    # the gravity relaxation interleaved in the same wave, bit-identical
+    # to the fused stage reference (pinned in tests/test_gravity.py)
+    for tag, strat, n_exec, max_agg, knobs in [
+        ("s2", "s2", 4, 1, {}),
+        ("s3", "s3", 1, 16, {}),
+        ("s2s3", "s2+s3", 4, 16, {}),
+        ("s3_epi", "s3", 1, 16, dict(fuse_epilogue=True)),
+        ("fused_per_family", "fused", 1, 1, {}),
     ]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
-                                max_aggregated=max_agg, launch_watermark=WM)
+                                max_aggregated=max_agg, launch_watermark=WM,
+                                **knobs)
         r = StrategyRunner(GravityScenario(cfg), agg)
         r.warmup()                           # AOT gather/prefix buckets
         r.rk3_step(st.u, dt)                 # compile remaining programs
@@ -64,6 +70,8 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
             "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
             "launches_by_family_per_step": by_family,
+            "fuse_epilogue": bool(knobs.get("fuse_epilogue", False)),
+            "flush_policy": agg.flush_policy,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,
         })

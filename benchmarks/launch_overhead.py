@@ -20,8 +20,12 @@ The aggregated rows (``s3_slotring`` / ``s2s3_slotring``) run the DESIGN.md
 and epilogue-fused mega-buckets (chunked body evaluation picked by timed
 warmup).  The ``s3_ladder{16,32,64,auto}`` sweep varies only the ladder cap,
 recording each row's final per-family ladder and timed-window bucket
-histograms.  All wall times are MEDIANS of per-repeat means (raw samples
-ride along in the JSON).
+histograms.  ``s3_cost_auto`` is the DESIGN.md §10 row: the tuner TIMES
+every drain-reachable bucket and derives the ladder minimizing predicted
+wall time per wave (launch counts are a proxy; the measured table rides in
+the row as ``cost_model``, the configured drain policy as
+``flush_policy``).  All wall times are MEDIANS of per-repeat means (raw
+samples ride along in the JSON).
 
   PYTHONPATH=src python benchmarks/launch_overhead.py [--full] [--steps N]
 
@@ -38,8 +42,8 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-from bench_util import WM, hist_deltas, region_hists, region_ladders, \
-    time_per_step
+from bench_util import WM, hist_deltas, region_cost_models, region_hists, \
+    region_ladders, time_per_step
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import StrategyRunner, UniformSedovScenario
@@ -133,7 +137,8 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     rows = []
 
     def record(tag, sec, launches, staging_s, dispatch_s: Optional[float],
-               samples=None, ladder=None, hists=None):
+               samples=None, ladder=None, hists=None, cost=None,
+               flush_policy=None):
         row = {
             "config": tag, "n_subgrids": n,
             "ms_per_step": round(sec * 1e3, 3),
@@ -149,6 +154,10 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
             row["ladder"] = ladder
         if hists is not None:
             row["region_hists"] = hists
+        if cost is not None:
+            row["cost_model"] = cost
+        if flush_policy is not None:
+            row["flush_policy"] = flush_policy
         rows.append(row)
         print(f"  {tag:24s} {row['ms_per_step']:9.2f} ms/step  "
               f"staging {row['staging_ms_per_step']} ms")
@@ -211,14 +220,25 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                      dict(max_aggregated=n, launch_watermark=WM,
                           autotune=True, inner_chunk="auto",
                           fuse_epilogue=True)))
+    # the DESIGN.md §10 row: the tuner times every drain-reachable bucket
+    # (median-of-samples wall time) and derives the ladder minimizing
+    # PREDICTED WALL TIME per wave, not launch count; the chosen ladder and
+    # the measured cost table ride in the row.  launch_watermark is pinned
+    # like the other rows, so the recorded flush_policy documents the
+    # adaptive-drain configuration without perturbing the A/B drain.
+    agg_rows.append(("s3_cost_auto", "s3", 1,
+                     dict(max_aggregated=n, launch_watermark=WM,
+                          autotune=True, inner_chunk="auto",
+                          fuse_epilogue=True, cost_model=True,
+                          flush_policy="cost")))
     scn = UniformSedovScenario(cfg)   # shared: one body, one chunk tuning
     for tag, strat, n_exec, knobs in agg_rows:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 staging="device", **knobs)
         r = StrategyRunner(scn, agg)
         r.warmup(wave_only=True)      # AOT wave buckets + chunk selection
-        r.rk3_step(st.u, dt)                      # warmup/compile
-        warm_hists = region_hists(r)
+        r.rk3_step(st.u, dt)          # warmup/compile (autotune retunes
+        warm_hists = region_hists(r)  # mid-step: 3 waves > warmup=2)
         r.stats["staging_s"] = 0.0
         if r.executor is not None:
             r.executor.stats["staging_s"] = 0.0
@@ -236,7 +256,10 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                r.pool.total_dispatch_s / repeats, samples=samples,
                ladder=region_ladders(r) if aggregated else None,
                hists=(hist_deltas(region_hists(r), warm_hists)
-                      if aggregated else None))
+                      if aggregated else None),
+               cost=region_cost_models(r) or None,
+               flush_policy=(getattr(agg, "flush_policy", "eager")
+                             if aggregated else None))
 
     # -- scan trajectory: whole multi-step RK3 as one program -------------
     r = StrategyRunner(UniformSedovScenario(cfg),

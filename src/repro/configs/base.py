@@ -193,6 +193,26 @@ class AggregationConfig:
     # bit-identical to its own fused reference but reassociates ~1e-5
     # relative to the eager global stage arithmetic.
     fuse_epilogue: bool = False
+    # Measured cost-model tuning (DESIGN.md §10): with ``cost_model=True``,
+    # warmup/retune TIME each drain-reachable bucket program per region
+    # (median of ``cost_samples`` runs on zero-filled inputs) and
+    # ``derive_ladder`` minimizes *predicted wall time per wave* instead of
+    # launch count — the device's cost structure, not a proxy.  Retune also
+    # re-sweeps ``inner_chunk="auto"`` (the warmup-only choice of §9 is
+    # superseded under this flag).  The per-region table is persisted into
+    # ``stats["regions"][fam]["cost_model"]``.
+    cost_model: bool = False
+    cost_samples: int = 3             # timed runs per bucket (median taken)
+    # When an underlying executor goes idle below the cap, should a partial
+    # queue drain early?  "eager" — always (the paper's launch criterion,
+    # the default); "watermark" — only once the queue reaches the region's
+    # *learned* wave peak (adaptive watermark: partial buckets stop leaking
+    # once the steady wave size is known); "cost" — consult the measured
+    # cost model and drain early only when the predicted wall time of the
+    # split drain beats waiting for the fuller bucket.  Policies affect
+    # WHEN launches fire, never submission order, so results stay
+    # bit-identical to eager (flush() drains every queue regardless).
+    flush_policy: str = "eager"       # "eager" | "watermark" | "cost"
 
     def bucket_sizes(self) -> Tuple[int, ...]:
         if self.buckets:

@@ -14,9 +14,9 @@
                     through one executor
 """
 from repro.core.aggregation import (
-    AggregationExecutor, RangeFuture, SlotView, TaskFuture, TaskSignature,
-    aggregation_region, derive_ladder, gather_futures, greedy_launches,
-    reset_regions,
+    AggregationExecutor, BucketCostModel, RangeFuture, SlotView, TaskFuture,
+    TaskSignature, aggregation_region, derive_ladder, gather_futures,
+    greedy_launches, ladder_candidates, reset_regions,
 )
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
@@ -30,9 +30,10 @@ from repro.core.strategies import (
 )
 
 __all__ = [
-    "AggregationExecutor", "RangeFuture", "SlotView", "TaskFuture",
-    "TaskSignature", "aggregation_region", "derive_ladder", "gather_futures",
-    "greedy_launches", "reset_regions",
+    "AggregationExecutor", "BucketCostModel", "RangeFuture", "SlotView",
+    "TaskFuture", "TaskSignature", "aggregation_region", "derive_ladder",
+    "gather_futures", "greedy_launches", "ladder_candidates",
+    "reset_regions",
     "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
     "Scenario", "KernelFamily", "TaskPopulation", "stage_family",
     "UniformSedovScenario", "AMRSedovScenario", "GravityScenario",

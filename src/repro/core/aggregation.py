@@ -43,6 +43,8 @@ construction.
 """
 from __future__ import annotations
 
+import bisect
+import statistics
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -58,12 +60,26 @@ from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import ExecutorPool
 
 
-# inner-chunk auto-tune memo: (body id, bucket, task specs) -> (body, chunk).
-# Keeping the body ref in the value pins its id() for the key's lifetime
-# (an id-keyed entry without the ref would collide on id reuse); the cache
-# is FIFO-bounded so long-lived sweeps don't pin every body ever tuned.
+# inner-chunk auto-tune memo: (backend, body id, bucket, task specs) ->
+# (body, chunk).  Keyed on the backend AND device kind because the chunk is
+# a *measured* choice — a value timed on one backend must never leak into a
+# process that later tunes the same body on another device.  Keeping the
+# body ref in the value pins its id() for the key's lifetime (an id-keyed
+# entry without the ref would collide on id reuse); the cache is
+# FIFO-bounded so long-lived sweeps don't pin every body ever tuned.
 _CHUNK_TUNE_MEMO: Dict[Tuple, Tuple[Any, int]] = {}
 _CHUNK_TUNE_MEMO_MAX = 32
+
+
+def _backend_key() -> Tuple[str, str]:
+    """(backend, device kind) — the identity a timed tuning choice is valid
+    for.  Measured decisions (inner_chunk, bucket costs) are per-device:
+    what saturates a TPU-v4 is not what saturates a 2-core CPU."""
+    try:
+        kind = getattr(jax.devices()[0], "device_kind", "")
+    except RuntimeError:
+        kind = ""
+    return jax.default_backend(), kind
 
 
 class TaskFuture:
@@ -322,6 +338,81 @@ class _Pending:
         return head, tail
 
 
+class BucketCostModel:
+    """Measured per-bucket wall times for ONE region (DESIGN.md §10).
+
+    ``record`` accumulates raw timed samples per bucket size; ``time``
+    reports the median (robust against scheduler hiccups on a noisy host);
+    ``predict`` extends the table to unmeasured sizes by piecewise-linear
+    interpolation in the bucket size — clamped below the smallest measured
+    bucket (a launch never costs less than the smallest thing we timed,
+    which is what stops the tuner from hallucinating free micro-launches)
+    and extrapolated above the largest with the last measured segment's
+    slope (floored at the largest measurement).
+
+    The model is the common currency of the measured tuner: the ladder
+    derivation minimizes ``predict_seq`` of each wave's greedy
+    decomposition, and the ``"cost"`` flush policy compares split-drain
+    against one-shot predictions.  ``as_stats`` is the JSON-safe table
+    persisted into ``stats["regions"][fam]["cost_model"]`` and the BENCH
+    rows (milliseconds, bucket-keyed).
+    """
+
+    __slots__ = ("samples",)
+
+    def __init__(self):
+        self.samples: Dict[int, List[float]] = {}
+
+    def record(self, bucket: int, seconds: float) -> None:
+        self.samples.setdefault(int(bucket), []).append(float(seconds))
+
+    def clear(self) -> None:
+        """Drop every sample (the measurements' premise changed — e.g. the
+        region's inner chunk was re-swept, so old timings describe programs
+        that no longer exist)."""
+        self.samples.clear()
+
+    def measured(self) -> bool:
+        return bool(self.samples)
+
+    def buckets(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.samples))
+
+    def time(self, bucket: int) -> Optional[float]:
+        s = self.samples.get(bucket)
+        return statistics.median(s) if s else None
+
+    def predict(self, bucket: int) -> float:
+        t = self.time(bucket)
+        if t is not None:
+            return t
+        bs = self.buckets()
+        if not bs:
+            raise ValueError("cost model has no measurements — check "
+                             "measured() before predicting")
+        if bucket <= bs[0]:
+            return self.time(bs[0])
+        if bucket >= bs[-1]:
+            hi = self.time(bs[-1])
+            if len(bs) == 1:
+                return hi * bucket / bs[-1]
+            lo = self.time(bs[-2])
+            slope = (hi - lo) / (bs[-1] - bs[-2])
+            return max(hi, hi + slope * (bucket - bs[-1]))
+        i = bisect.bisect_left(bs, bucket)
+        b0, b1 = bs[i - 1], bs[i]
+        t0, t1 = self.time(b0), self.time(b1)
+        return t0 + (t1 - t0) * (bucket - b0) / (b1 - b0)
+
+    def predict_seq(self, buckets: Sequence[int]) -> float:
+        """Predicted wall time of one greedy drain (launch sequence)."""
+        return sum(self.predict(b) for b in buckets)
+
+    def as_stats(self) -> Dict[int, float]:
+        """{bucket: median milliseconds}, rounded for the stats surface."""
+        return {b: round(self.time(b) * 1e3, 4) for b in self.buckets()}
+
+
 def greedy_decomposition(k: int, buckets: Sequence[int]) -> Tuple[int, ...]:
     """The bucket sequence the greedy drain launches for a queue of length
     k under a valid ladder (every bucket <= the cap by validation, so this
@@ -342,21 +433,12 @@ def greedy_launches(k: int, buckets: Sequence[int]) -> int:
     return len(greedy_decomposition(k, buckets))
 
 
-def derive_ladder(queue_hist: Mapping[int, int], cap: int,
-                  budget: int) -> Tuple[int, ...]:
-    """Re-derive a bucket ladder from an observed queue-length histogram.
-
-    Starting from the mandatory ``{1}`` (the no-padding invariant needs a
-    remainder bucket) seeded with the dominant wave's cap-decomposition
-    (a single candidate search cannot learn that the cap bucket is only
-    worth having TOGETHER with its remainder — e.g. a 100-task wave under
-    cap 64 wants {64, 36} as a pair), greedily add the candidate size —
-    observed wave peaks, clipped to the cap, their cap-split remainders,
-    plus powers of two — that most reduces the expected launches per
-    wave, until ``budget`` distinct bucket programs are reached or no
-    candidate improves.  A steady k-task wave therefore converges on a
-    ladder covering k exactly: one launch per cap-chunk, no ones-drain.
-    """
+def ladder_candidates(queue_hist: Mapping[int, int], cap: int) -> set:
+    """The bucket sizes a ladder derivation considers: observed wave peaks
+    clipped to the cap, their cap-split remainders, plus powers of two up
+    to the cap.  Shared by :func:`derive_ladder` and the executor's
+    cost-model measurement pass, so exactly the drain-reachable sizes the
+    tuner may pick are the ones that get timed."""
     candidates = set()
     for k in queue_hist:
         if k <= 0:
@@ -368,11 +450,46 @@ def derive_ladder(queue_hist: Mapping[int, int], cap: int,
     while b <= cap:
         candidates.add(b)
         b *= 2
+    return candidates
+
+
+def derive_ladder(queue_hist: Mapping[int, int], cap: int, budget: int,
+                  cost_model: Optional[BucketCostModel] = None
+                  ) -> Tuple[int, ...]:
+    """Re-derive a bucket ladder from an observed queue-length histogram.
+
+    Starting from the mandatory ``{1}`` (the no-padding invariant needs a
+    remainder bucket) seeded with the dominant wave's cap-decomposition
+    (a single candidate search cannot learn that the cap bucket is only
+    worth having TOGETHER with its remainder — e.g. a 100-task wave under
+    cap 64 wants {64, 36} as a pair), greedily add the candidate size
+    (:func:`ladder_candidates`) that most reduces the per-wave objective,
+    until ``budget`` distinct bucket programs are reached or no candidate
+    improves.  A steady k-task wave therefore converges on a ladder
+    covering k exactly: one launch per cap-chunk, no ones-drain.
+
+    The objective is *expected launches per wave* — the §9 proxy — unless
+    a measured :class:`BucketCostModel` is supplied, in which case it is
+    the *predicted wall time per wave* (DESIGN.md §10: the device's cost
+    structure, not a launch count).  Under the model, a final prune drops
+    any seeded bucket whose removal does not increase predicted time, so
+    exact-cost ties always resolve to the smaller compile footprint
+    (candidates are also tried smallest-first: an equal-cost pair admits
+    the cheaper program).
+    """
+    # non-positive "wave lengths" carry no drain (and would crash the
+    # greedy cover): drop them before they reach the objective
+    queue_hist = {k: c for k, c in queue_hist.items() if k > 0}
+    candidates = ladder_candidates(queue_hist, cap)
+    use_model = cost_model is not None and cost_model.measured()
 
     def cost(ladder):
         # candidate buckets never exceed the cap, so the greedy cover of
         # the FULL wave length models the real drain (cap-splits included)
         ls = sorted(ladder)
+        if use_model:
+            return sum(c * cost_model.predict_seq(greedy_decomposition(k, ls))
+                       for k, c in queue_hist.items())
         return sum(c * greedy_launches(k, ls)
                    for k, c in queue_hist.items())
 
@@ -384,15 +501,38 @@ def derive_ladder(queue_hist: Mapping[int, int], cap: int,
         for b in sorted(seed - {0}, reverse=True):
             if len(ladder) < budget:
                 ladder.add(b)
-    while len(ladder) < budget:
-        best, best_cost = None, cost(ladder)
-        for c in sorted(candidates - ladder):
-            cc = cost(ladder | {c})
-            if cc < best_cost:
-                best, best_cost = c, cc
-        if best is None:
-            break
-        ladder.add(best)
+
+    def grow():
+        while len(ladder) < budget:
+            best, best_cost = None, cost(ladder)
+            for c in sorted(candidates - ladder):
+                cc = cost(ladder | {c})
+                if cc < best_cost:
+                    best, best_cost = c, cc
+            if best is None:
+                break
+            ladder.add(best)
+
+    grow()
+    if use_model:
+        # The seeds were added without a cost check (correct under the
+        # launch-count objective, where a mega bucket can never lose);
+        # measured time CAN say a big bucket is pessimal, so drop any
+        # bucket whose removal keeps predicted time no worse — ties go to
+        # the smaller compile footprint — then let the search refill the
+        # freed budget (a pruned cap bucket may have been shadowing its
+        # cheaper halves).  (cost, |ladder|) strictly decreases each
+        # cycle, so the loop terminates.
+        while True:
+            pruned = False
+            for b in sorted(ladder - {1}, reverse=True):
+                if cost(ladder - {b}) <= cost(ladder):
+                    ladder.discard(b)
+                    pruned = True
+                    break
+            if not pruned:
+                break
+            grow()
     return tuple(sorted(ladder))
 
 
@@ -424,13 +564,15 @@ class _Region:
     __slots__ = ("signature", "batched_fn", "ring", "queue", "compiled",
                  "host_jit", "gather_jit", "stats", "buckets", "chunk",
                  "chunk_tuned", "queued_tasks", "waves", "tuned",
-                 "_wave_peak", "_aot_parents")
+                 "_wave_peak", "_aot_parents", "cost", "_retuned_waves",
+                 "_retuned_peak", "_donate")
 
     def __init__(self, signature: TaskSignature, batched_fn: Callable,
                  donate: bool, buckets: Tuple[int, ...] = (1,),
                  chunk: int = 0):
         self.signature = signature
         self.batched_fn = batched_fn
+        self._donate = donate
         self.ring: Optional[SlotRing] = None
         self.queue: List[_Pending] = []
         self.queued_tasks = 0         # tasks queued (entries carry counts)
@@ -442,11 +584,12 @@ class _Region:
         self.tuned = False
         self._wave_peak = 0
         self._aot_parents: Dict[Tuple, Tuple] = {}  # pk -> parent structs
+        self.cost = BucketCostModel()     # measured bucket wall times (§10)
+        self._retuned_waves = -1      # waves counter at the last retune
+        self._retuned_peak = 0        # largest wave peak seen at last retune
         # shared shape-polymorphic wrappers (jit re-specializes per shape,
         # so ONE wrapper serves every bucket / parent shape)
-        self.host_jit = jax.jit(self._apply_host,
-                                donate_argnums=(0,) if donate else ())
-        self.gather_jit = jax.jit(self._apply_gathered)
+        self.reset_compiled()
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
                       "queue_hist": {}, "ladder": list(buckets)}
 
@@ -491,6 +634,15 @@ class _Region:
             self.ring = SlotRing(capacity, example_args)
         return self.ring
 
+    def expected_peak(self) -> int:
+        """The modal observed wave peak (ties to the larger) — what the
+        adaptive flush policies treat as 'a full wave'; 0 before any wave
+        has completed (policies then behave eagerly)."""
+        qh = self.stats["queue_hist"]
+        if not qh:
+            return 0
+        return max(qh, key=lambda k: (qh[k], k))
+
     # -- AOT lowering (ONE recipe shared by warmup and ladder retune, so
     # the cache keys the _launch lookup probes are spelled out once) ------
     def aot_ref(self, bucket: int, parents: Sequence[Any]) -> None:
@@ -514,6 +666,17 @@ class _Region:
             self.compiled[("ring", bucket)] = jax.jit(
                 partial(self._apply_ring_prefix, bucket)).lower(
                     start, *ring_specs).compile()
+
+    def reset_compiled(self) -> None:
+        """Drop every compiled program AND recreate the shared jit
+        wrappers.  Needed when the inner chunk changes after compilation
+        (a retune-time re-sweep): every cached trace baked the old chunk,
+        and the shared wrappers' per-shape jit caches would silently keep
+        serving it."""
+        self.compiled.clear()
+        self.host_jit = jax.jit(self._apply_host,
+                                donate_argnums=(0,) if self._donate else ())
+        self.gather_jit = jax.jit(self._apply_gathered)
 
 
 class AggregationExecutor:
@@ -561,6 +724,14 @@ class AggregationExecutor:
         self._staging = getattr(self.config, "staging", "device")
         if self._staging not in ("device", "host"):
             raise ValueError(f"unknown staging mode {self._staging!r}")
+        self._flush_policy = getattr(self.config, "flush_policy", "eager")
+        if self._flush_policy not in ("eager", "watermark", "cost"):
+            raise ValueError(
+                f"unknown flush_policy {self._flush_policy!r} — valid "
+                f"policies: eager, watermark, cost")
+        self._cost_on = bool(getattr(self.config, "cost_model", False))
+        self._cost_samples = max(1, int(getattr(self.config,
+                                                "cost_samples", 3)))
         self._bodies: Dict[str, Callable] = {}
         self._regions: Dict[TaskSignature, _Region] = {}
         self._default_kernel: Optional[str] = None
@@ -573,7 +744,8 @@ class AggregationExecutor:
         # statistics for the benchmark tables; per-family bucket histograms
         # live under "regions" (the multi-signature observability surface)
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
-                      "staging_s": 0.0, "regions": {}}
+                      "staging_s": 0.0, "regions": {},
+                      "flush_policy": self._flush_policy}
         if batched_fn is not None:
             self.register(name, batched_fn)
 
@@ -706,6 +878,9 @@ class AggregationExecutor:
             n_parent = min(p.shape[0] for p in parents)
             for b in (b for b in aot_buckets(region) if b <= n_parent):
                 region.aot_ref(b, parents)
+            if self._cost_on:
+                self._measure_region(region, aot_buckets(region),
+                                     parents=parents)
             if example_args is None:
                 return
         if example_args is None:
@@ -728,6 +903,9 @@ class AggregationExecutor:
                           for r in ring.buffers()]
             for b in aot_buckets(region):
                 region.aot_ring(b, ring_specs)
+            if self._cost_on:
+                self._measure_region(region, aot_buckets(region),
+                                     ring_specs=ring_specs)
         else:
             for b in aot_buckets(region):
                 stacked = tuple(
@@ -736,23 +914,30 @@ class AggregationExecutor:
                 region.compiled[("host", b)] = region.host_jit.lower(
                     *stacked).compile()
 
-    def _tune_chunk(self, region: _Region, parents: Sequence[Any]) -> None:
+    def _tune_chunk(self, region: _Region, parents: Sequence[Any],
+                    force: bool = False) -> None:
         """``inner_chunk="auto"``: pick the region's mega-bucket chunk by
         timing the body on its largest bucket over candidate chunk sizes
-        (0 = flat, then powers of two).  Runs once per region, before any
-        bucket program is compiled, so every compiled program sees the
-        chosen chunk.  This is a measurement, not a lowering — warmup with
-        "auto" executes a handful of zero-filled buckets.  Results are
-        memoized per (body, bucket shape), so re-tuning the same family in
-        another executor (a benchmark sweep) is free."""
+        (0 = flat, then powers of two).  Runs once per region at warmup,
+        before any bucket program is compiled, so every compiled program
+        sees the chosen chunk; under ``cost_model=True`` the retune pass
+        re-runs it with ``force=True`` (DESIGN.md §10 — the sweep follows
+        the ladder to whatever bucket the tuner actually converged on,
+        superseding the §9 warmup-only choice).  This is a measurement,
+        not a lowering — tuning executes a handful of zero-filled buckets.
+        Results are memoized per (backend+device kind, body, bucket
+        shape), so re-tuning the same family in another executor (a
+        benchmark sweep) is free, while a choice timed on one backend can
+        never leak into another; ``force`` bypasses the memo read and
+        overwrites the entry."""
         n_parent = min(p.shape[0] for p in parents)
         b = max((x for x in region.buckets if x <= n_parent), default=0)
         if b < 2:
             return
-        key = (id(region.batched_fn), b,
+        key = (_backend_key(), id(region.batched_fn), b,
                tuple((tuple(p.shape[1:]), str(p.dtype)) for p in parents))
         memo = _CHUNK_TUNE_MEMO.get(key)
-        if memo is not None:
+        if memo is not None and not force:
             region.chunk = memo[1]
             region.chunk_tuned = True
             region.stats["inner_chunk"] = memo[1]
@@ -785,6 +970,51 @@ class AggregationExecutor:
         region.chunk = best_chunk
         region.chunk_tuned = True
         region.stats["inner_chunk"] = best_chunk
+
+    # -- bucket cost measurement (DESIGN.md §10) ---------------------------
+    def _measure_region(self, region: _Region, buckets: Sequence[int],
+                        parents: Optional[Sequence[Any]] = None,
+                        ring_specs: Optional[Sequence[Any]] = None) -> None:
+        """Time each bucket's compiled program on zero-filled inputs into
+        the region's :class:`BucketCostModel`: one warm call, then the
+        median of ``cost_samples`` timed runs.  Ref-staged regions time
+        the contiguous-prefix program (the steady bulk-submission fast
+        path — gather-by-index costs the same body plus one take);
+        ring-staged regions time the ring-prefix program.  Buckets that
+        already have samples are skipped, so repeated warmups are free;
+        a chunk re-sweep clears the model first (old timings described
+        programs that no longer exist).  Host staging is never measured —
+        it is the seed baseline, not a tuned hot path."""
+        if parents is not None:
+            concrete = tuple(jnp.zeros(tuple(p.shape), p.dtype)
+                             for p in parents)
+
+            def program(b):
+                region.aot_ref(b, parents)
+                pk = tuple(tuple(p.shape) for p in parents)
+                return region.compiled[("prefix_aot", b, pk)]
+        elif ring_specs is not None:
+            concrete = tuple(jnp.zeros(tuple(r.shape), r.dtype)
+                             for r in ring_specs)
+
+            def program(b):
+                region.aot_ring(b, ring_specs)
+                return region.compiled[("ring", b)]
+        else:
+            return
+        n_slots = min(c.shape[0] for c in concrete)
+        start = jnp.int32(0)
+        for b in sorted(set(buckets)):
+            if b > n_slots or region.cost.time(b) is not None:
+                continue
+            fn = program(b)
+            jax.block_until_ready(fn(start, *concrete))        # warm call
+            for _ in range(self._cost_samples):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(start, *concrete))
+                region.cost.record(b, time.perf_counter() - t0)
+        if region.cost.measured():
+            region.stats["cost_model"] = region.cost.as_stats()
 
     # -- submission API ----------------------------------------------------
     def submit(self, *args, kernel: Optional[str] = None) -> TaskFuture:
@@ -904,9 +1134,11 @@ class AggregationExecutor:
 
     def _maybe_launch(self) -> None:
         """The paper's launch policy, per region: launch when (a) the cap is
-        reached, or (b) an underlying executor is idle; otherwise keep
-        aggregating.  Regions progress independently — a full family never
-        stalls behind another family's partial queue."""
+        reached, or (b) an underlying executor is idle AND the flush policy
+        agrees that draining the partial queue now beats waiting for a
+        fuller bucket; otherwise keep aggregating.  Regions progress
+        independently — a full family never stalls behind another family's
+        partial queue."""
         progress = True
         while progress:
             progress = False
@@ -918,9 +1150,42 @@ class AggregationExecutor:
                                      region, self.config.max_aggregated))
                     progress = True
                 elif (q >= self.config.launch_watermark
-                      and self.pool.any_idle()):
+                      and self.pool.any_idle()
+                      and self._idle_drain_pays(region, q)):
                     self._launch(region, self._largest_bucket(region, q))
                     progress = True
+
+    def _idle_drain_pays(self, region: _Region, q: int) -> bool:
+        """The watermark-adaptive flush decision (DESIGN.md §10): should a
+        partial queue of ``q`` tasks drain into an idle executor, or keep
+        aggregating toward the region's typical wave?
+
+        * ``eager`` — always drain (the §4 policy, and the fallback of the
+          adaptive policies until a wave peak / cost model exists);
+        * ``watermark`` — drain only at/after the *learned* wave peak, so
+          partial buckets stop leaking once the steady wave size is known;
+        * ``cost`` — drain early only when the measured model predicts the
+          split drain (q now + the remainder later) to be no slower than
+          waiting and draining the full wave in one greedy pass — i.e.
+          exactly when the big bucket's measured cost is superlinear
+          enough that splitting it is free.
+        """
+        if self._flush_policy == "eager":
+            return True
+        peak = region.expected_peak()
+        if not peak or q >= peak:
+            return True               # no history yet, or a full wave: go
+        if self._flush_policy == "watermark":
+            return False
+        if not region.cost.measured():
+            return True               # "cost" without a model: eager
+        split = (region.cost.predict_seq(
+                     greedy_decomposition(q, region.buckets))
+                 + region.cost.predict_seq(
+                     greedy_decomposition(peak - q, region.buckets)))
+        full = region.cost.predict_seq(
+            greedy_decomposition(peak, region.buckets))
+        return split <= full
 
     @staticmethod
     def _largest_bucket(region: _Region, k: int) -> int:
@@ -1025,25 +1290,51 @@ class AggregationExecutor:
             qh[peak] = qh.get(peak, 0) + 1
             region.waves += 1
             region._wave_peak = 0
-            if region.tuned and peak > max(region.buckets):
-                # the workload outgrew the learned ladder (e.g. warmup saw
-                # only watermark-drained micro-waves, then a bulk range
-                # arrived): re-arm the tuner instead of pinning the small
-                # ladder forever
+            if region.tuned and peak > region._retuned_peak:
+                # the workload outgrew anything the last retune SAW (e.g.
+                # warmup saw only watermark-drained micro-waves, then a
+                # bulk range arrived): re-arm the tuner instead of pinning
+                # the small ladder forever.  The trigger is new EVIDENCE
+                # (a peak beyond the tuned histogram), never the ladder
+                # shape — a measured tuner may legitimately pick a ladder
+                # whose max bucket is below the wave (splitting predicted
+                # faster), and comparing against max(buckets) would then
+                # re-arm, and re-tune, on every single wave
                 region.tuned = False
         if (self.config.autotune and not region.tuned
                 and region.waves >= self.config.autotune_warmup):
             self._retune_region(region)
 
     def _retune_region(self, region: _Region) -> None:
-        """Swap in the ladder minimizing expected launches per observed
-        wave (AOT-compiling the new buckets for every parent set seen), as
-        the AMR follow-up work does once launch overhead stops dominating."""
+        """Swap in the ladder minimizing the per-wave objective — expected
+        launches, or predicted wall time under ``cost_model=True`` — and
+        AOT-compile the new buckets for every parent set seen, as the AMR
+        follow-up work does once launch overhead stops dominating.
+
+        The measured path (DESIGN.md §10) runs three extra steps first:
+        re-sweep ``inner_chunk="auto"`` against the current backend (a
+        chunk change invalidates every compiled program AND every cost
+        sample — both are rebuilt), then time every drain-reachable
+        candidate bucket (:func:`ladder_candidates`), then hand the model
+        to :func:`derive_ladder`.  Candidate measurement compiles more
+        programs than ``compile_budget`` — the budget bounds the ladder
+        the steady state keeps, not what the tuner is allowed to probe.
+        """
+        region._retuned_waves = region.waves
+        region._retuned_peak = max(
+            (k for k in region.stats["queue_hist"] if k > 0), default=0)
+        chunk_changed = False
+        cost_model = None
+        if self._cost_on:
+            chunk_changed = self._resweep_chunk(region)
+            cost_model = self._measure_candidates(region)
         ladder = derive_ladder(region.stats["queue_hist"],
                                self.config.max_aggregated,
-                               self.config.compile_budget)
+                               self.config.compile_budget, cost_model)
         region.tuned = True
-        if ladder == region.buckets:
+        region.stats["tuned_by"] = ("cost_model" if cost_model is not None
+                                    else "launches")
+        if ladder == region.buckets and not chunk_changed:
             return
         region.buckets = ladder
         region.stats["ladder"] = list(ladder)
@@ -1064,13 +1355,70 @@ class AggregationExecutor:
             for b in (b for b in sorted(used) if b <= n_parent):
                 region.aot_ref(b, parents)
 
+    def _resweep_chunk(self, region: _Region) -> bool:
+        """Retune-time ``inner_chunk="auto"`` re-sweep (supersedes the §9
+        warmup-only choice): re-time the chunk candidates on the current
+        backend, bypassing the memo.  Returns True when the chunk changed
+        — the caller must then treat every compiled program and cost
+        sample as stale (this method already resets both)."""
+        if not self._chunk_auto:
+            return False
+        parents = self._primary_parents(region)
+        if parents is None:
+            return False
+        old = region.chunk
+        self._tune_chunk(region, parents, force=True)
+        if region.chunk == old:
+            return False
+        region.reset_compiled()
+        region.cost.clear()
+        region.stats.pop("cost_model", None)
+        return True
+
+    @staticmethod
+    def _primary_parents(region: _Region) -> Optional[Tuple[Any, ...]]:
+        """The parent set measurements run against: the deepest one seen
+        (biggest buckets fit), falling back to the ring's buffers."""
+        best = None
+        for parents in region._aot_parents.values():
+            n = min(p.shape[0] for p in parents)
+            if best is None or n > best[0]:
+                best = (n, parents)
+        if best is not None:
+            return best[1]
+        if region.ring is not None:
+            return tuple(jax.ShapeDtypeStruct(r.shape, r.dtype)
+                         for r in region.ring.buffers())
+        return None
+
+    def _measure_candidates(self, region: _Region
+                            ) -> Optional[BucketCostModel]:
+        """Time every drain-reachable candidate bucket for the region's
+        observed waves (already-measured buckets are free), returning the
+        model — or None when nothing could be measured (e.g. a host-staged
+        region, which the cost path then treats as launch-count tuning)."""
+        cands = sorted(ladder_candidates(region.stats["queue_hist"],
+                                         self.config.max_aggregated))
+        for parents in region._aot_parents.values():
+            self._measure_region(region, cands, parents=parents)
+        if region.ring is not None:
+            ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
+                          for r in region.ring.buffers()]
+            self._measure_region(region, cands, ring_specs=ring_specs)
+        return region.cost if region.cost.measured() else None
+
     def retune(self) -> Dict[str, Tuple[int, ...]]:
-        """Force a ladder retune of every region from the queue-length
-        histograms observed so far; returns the ladders by family."""
+        """Force a ladder retune of every region that has completed at
+        least one NEW wave since its last retune; returns the ladders by
+        family.  A region with an empty queue histogram — or none recorded
+        since the last retune — is left untouched: re-deriving from no
+        (new) evidence would only produce a degenerate ``(1,)`` ladder or
+        burn AOT work reproducing the current one."""
         out = {}
         for region in self._regions.values():
-            region.tuned = False
-            if region.stats["queue_hist"]:
+            if (region.stats["queue_hist"]
+                    and region.waves != region._retuned_waves):
+                region.tuned = False
                 self._retune_region(region)
             out[region.signature.describe()] = region.buckets
         return out

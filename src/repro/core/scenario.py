@@ -39,9 +39,12 @@ from repro.hydro.state import (
     sync_coarse,
 )
 from repro.hydro.stepper import (
-    level_batched_body, level_batched_jit, rk_stage_epilogue, subgrid_rhs,
+    level_batched_body, level_batched_jit, rk_stage_epilogue,
+    stage_coeff_vectors, subgrid_rhs,
 )
-from repro.kernels.gravity import gravity_batched_body, gravity_batched_jit
+from repro.kernels.gravity import (
+    gravity_batched_body, gravity_batched_jit, gravity_source_update,
+)
 
 
 def xla_task_body(cfg: HydroConfig, h: float) -> Callable:
@@ -86,6 +89,27 @@ def stage_family(fam: KernelFamily, n_body_args: int) -> KernelFamily:
         return jax.vmap(fam.epilogue)(out, *args[n_body_args:])
 
     return KernelFamily(fam.kernel + "+epi", batched, jax.jit(batched))
+
+
+def _cached_u0_interiors(scn, u0, v, v_int, extract):
+    """``u0`` is invariant across a step's three stages (and IS ``v`` in
+    stage 1): extract its interiors once per step, keyed on the ``u0``
+    object.  Shared by every scenario's ``stage_populations``."""
+    if v is u0:
+        scn._u0_int_cache = (u0, v_int)
+        return v_int
+    cache = getattr(scn, "_u0_int_cache", None)
+    if cache is None or cache[0] is not u0:
+        cache = (u0, extract(u0))
+        scn._u0_int_cache = cache
+    return cache[1]
+
+
+def _coeff_cache(scn) -> dict:
+    cache = getattr(scn, "_stage_coeff_cache", None)
+    if cache is None:
+        cache = scn._stage_coeff_cache = {}
+    return cache
 
 
 @dataclass(frozen=True)
@@ -157,8 +181,12 @@ class Scenario:
         falls back to rhs() + global combine."""
         return None
 
-    def assemble_stage(self, state, outs: Sequence[Any]):
-        """Per-population stage outputs -> the next stage's state pytree."""
+    def assemble_stage(self, state, outs: Sequence[Any], dt, c0, c1):
+        """Per-population stage outputs (population order) -> the next
+        stage's state pytree.  The stage coefficients ride along because
+        cross-family couplings (e.g. gravity's ``c1*dt`` source tail) are
+        applied HERE, after all of the wave's launches — a per-slot
+        epilogue cannot see another family's output."""
         raise NotImplementedError
 
     def stage_warmup_parent_specs(self):
@@ -175,7 +203,7 @@ class Scenario:
             raise NotImplementedError(
                 f"scenario {self.name!r} declares no stage populations")
         outs = [self.jitted_body(p.kernel)(*p.parents) for p in pops]
-        return self.assemble_stage(v, outs)
+        return self.assemble_stage(v, outs, dt, c0, c1)
 
     # -- provided ----------------------------------------------------------
     def finalize_step(self, state):
@@ -265,34 +293,17 @@ class UniformSedovScenario(Scenario):
         cfg = self.cfg
         subs = extract_subgrids(v, cfg.subgrid, cfg.ghost, self.bc)
         v_int = extract_subgrids(v, cfg.subgrid, 0, self.bc)
-        # u0 is invariant across a step's three stages (and IS v in stage
-        # 1): extract its interior once per step, not once per stage
-        if v is u0:
-            u0_int = v_int
-            self._u0_int_cache = (u0, u0_int)
-        else:
-            cache = getattr(self, "_u0_int_cache", None)
-            if cache is None or cache[0] is not u0:
-                cache = (u0, extract_subgrids(u0, cfg.subgrid, 0, self.bc))
-                self._u0_int_cache = cache
-            u0_int = cache[1]
+        u0_int = _cached_u0_interiors(
+            self, u0, v, v_int,
+            lambda u: extract_subgrids(u, cfg.subgrid, 0, self.bc))
         n = subs.shape[0]
-        # (c0, c1, dt) repeat every step at fixed dt: reuse the broadcast
-        # vectors instead of dispatching three jnp.full per stage
-        cache = getattr(self, "_coeff_cache", None)
-        if cache is None:
-            cache = self._coeff_cache = {}
-        key = (c0, c1, n)
-        hit = cache.get(key)
-        if hit is None or hit[0] is not dt:
-            hit = (dt, tuple(jnp.full((n,), c, self._dtype)
-                             for c in (c0, c1, dt)))
-            cache[key] = hit
+        coeffs = stage_coeff_vectors(_coeff_cache(self), dt, c0, c1, n,
+                                     self._dtype)
         return (TaskPopulation(
             self._stage_families[0].kernel,
-            (subs, v_int, u0_int) + hit[1]),)
+            (subs, v_int, u0_int) + coeffs),)
 
-    def assemble_stage(self, state, outs):
+    def assemble_stage(self, state, outs, dt, c0, c1):
         return assemble_global(outs[0], self.cfg.subgrid)
 
     def stage_warmup_parent_specs(self):
@@ -318,6 +329,12 @@ class AMRSedovScenario(Scenario):
     whose sub-grid shapes agree share one kernel family (the same compiled
     buckets serve both); mixed sizes open two families that aggregate
     concurrently.  ``finalize_step`` re-syncs the covered coarse cells.
+
+    The epilogue-fused stage path (DESIGN.md §10) extends §9 to the
+    adaptive workload: each level's family derives a ``stage_family`` twin
+    with the per-task traced ``h`` riding straight through the fused body,
+    so one compiled bucket still serves every refinement level whose
+    sub-grid shapes agree — now with the Shu-Osher axpy fused in.
     """
 
     def __init__(self, cfg: AMRHydroConfig, bc: str = "outflow"):
@@ -325,9 +342,12 @@ class AMRSedovScenario(Scenario):
         self.bc = bc
         self.name = cfg.name
         dtype = jnp.dtype(cfg.dtype)
+        self._dtype = dtype
         self._levels = ("coarse", "fine")
         self._subgrid = {"coarse": cfg.coarse_subgrid,
                          "fine": cfg.fine_subgrid}
+        self._n_level = {"coarse": cfg.n_subgrids_coarse,
+                         "fine": cfg.n_subgrids_fine}
         self._h = {
             "coarse": jnp.full((cfg.n_subgrids_coarse,), cfg.h_coarse, dtype),
             "fine": jnp.full((cfg.n_subgrids_fine,), cfg.h_fine, dtype),
@@ -338,8 +358,15 @@ class AMRSedovScenario(Scenario):
         self._families = tuple(
             KernelFamily(f"hydro_rhs_s{s}",
                          level_batched_body(cfg.gamma, cfg.ghost, s),
-                         level_batched_jit(cfg.gamma, cfg.ghost, s))
+                         level_batched_jit(cfg.gamma, cfg.ghost, s),
+                         epilogue=rk_stage_epilogue)
             for s in dict.fromkeys(self._subgrid.values()))
+        # the level body consumes (subs, h); everything after feeds the
+        # vmapped stage epilogue
+        self._stage_families = tuple(stage_family(f, 2)
+                                     for f in self._families)
+        self._stage_kernel = {lvl: self._kernel[lvl] + "+epi"
+                              for lvl in self._levels}
 
     def families(self):
         return self._families
@@ -366,12 +393,63 @@ class AMRSedovScenario(Scenario):
         dtype = jnp.dtype(cfg.dtype)
         specs = []
         for lvl in self._levels:
-            n = (cfg.n_subgrids_coarse if lvl == "coarse"
-                 else cfg.n_subgrids_fine)
+            n = self._n_level[lvl]
             p = self._subgrid[lvl] + 2 * cfg.ghost
             specs.append((self._kernel[lvl], (
                 jax.ShapeDtypeStruct((n, cfg.n_fields, p, p, p), dtype),
                 jax.ShapeDtypeStruct((n,), dtype))))
+        return tuple(specs)
+
+    # -- epilogue-fused RK stages (DESIGN.md §10) --------------------------
+    def _interiors(self, state):
+        """Per-level interiors of the RAW state arrays — the combine side
+        of a stage reads the un-synced levels, exactly as the generic
+        ``u1 = v + dt * rhs(v)`` path does (the sync lives inside the
+        ghost exchange and in ``finalize_step``)."""
+        uc, uf = state
+        return {"coarse": extract_subgrids(uc, self.cfg.coarse_subgrid, 0,
+                                           self.bc),
+                "fine": extract_subgrids(uf, self.cfg.fine_subgrid, 0,
+                                         self.bc)}
+
+    def stage_families(self):
+        return self._stage_families
+
+    def stage_populations(self, u0, v, dt, c0, c1):
+        uc, uf = v
+        subs = dict(zip(self._levels,
+                        extract_subgrids_multilevel(uc, uf, self.cfg,
+                                                    self.bc)))
+        v_int = self._interiors(v)
+        u0_int = _cached_u0_interiors(self, u0, v, v_int, self._interiors)
+        cache = _coeff_cache(self)
+        pops = []
+        for lvl in self._levels:
+            coeffs = stage_coeff_vectors(cache, dt, c0, c1,
+                                         self._n_level[lvl], self._dtype)
+            pops.append(TaskPopulation(
+                self._stage_kernel[lvl],
+                (subs[lvl], self._h[lvl], v_int[lvl], u0_int[lvl]) + coeffs))
+        return tuple(pops)
+
+    def assemble_stage(self, state, outs, dt, c0, c1):
+        return tuple(assemble_global(out, self._subgrid[lvl])
+                     for lvl, out in zip(self._levels, outs))
+
+    def stage_warmup_parent_specs(self):
+        cfg = self.cfg
+        dtype = self._dtype
+        specs = []
+        for lvl in self._levels:
+            n, s = self._n_level[lvl], self._subgrid[lvl]
+            p = s + 2 * cfg.ghost
+            scalar = jax.ShapeDtypeStruct((n,), dtype)
+            specs.append((self._stage_kernel[lvl], (
+                jax.ShapeDtypeStruct((n, cfg.n_fields, p, p, p), dtype),
+                scalar,
+                jax.ShapeDtypeStruct((n, cfg.n_fields, s, s, s), dtype),
+                jax.ShapeDtypeStruct((n, cfg.n_fields, s, s, s), dtype),
+                scalar, scalar, scalar)))
         return tuple(specs)
 
 
@@ -385,12 +463,19 @@ def _apply_gravity_source(u, dudt, pg):
     gains ``rho * g`` and energy gains ``S . g``.  ONE shared jitted code
     path for runner and reference, so bit-exactness reduces to per-family
     kernel equivalence."""
-    rho = u[0]
-    gx, gy, gz = pg[1], pg[2], pg[3]
-    dudt = (dudt.at[1].add(rho * gx)
-                .at[2].add(rho * gy)
-                .at[3].add(rho * gz))
-    return dudt.at[4].add(u[1] * gx + u[2] * gy + u[3] * gz)
+    return gravity_source_update(u, dudt, pg)
+
+
+@jax.jit
+def _apply_gravity_stage_source(v, staged, pg, c1dt):
+    """Couple gravity into an epilogue-fused stage (DESIGN.md §10).  The
+    hydro stage family already produced ``c0*u0 + c1*(v + dt*dudt)``; the
+    gravity tail of the full update enters as its algebraic remainder,
+    ``+ c1*dt * src(v, pg)``.  ONE shared jitted path for runner and
+    reference (the aggregated stage wave and ``reference_stage`` both
+    land here), so stage bit-exactness again reduces to per-family kernel
+    equivalence."""
+    return gravity_source_update(v, staged, pg, scale=c1dt)
 
 
 class GravityScenario(Scenario):
@@ -403,6 +488,15 @@ class GravityScenario(Scenario):
     ``AggregationExecutor``: the region registry routes them by kernel id
     into two concurrent ``TaskSignature`` families with independent bucket
     ladders — the cross-solver aggregation the redesign exists to unlock.
+
+    The epilogue-fused stage path (DESIGN.md §10) is the TWO-FAMILY stage
+    protocol: each RK stage submits the hydro family's epilogue-fused twin
+    (gather -> Reconstruct+Flux -> Shu-Osher axpy, one program per bucket)
+    AND the unchanged gravity relaxation interleaved in the SAME wave; the
+    cross-family coupling — which no per-slot epilogue can see, the
+    gravity output being a different launch — enters at ``assemble_stage``
+    as the algebraically equivalent ``+ c1*dt * src(v, pg)`` tail, through
+    one jitted path shared with ``reference_stage``.
     """
 
     def __init__(self, cfg: GravityHydroConfig, bc: str = "outflow"):
@@ -416,13 +510,17 @@ class GravityScenario(Scenario):
         self._families = (
             KernelFamily("hydro_rhs",
                          level_batched_body(hc.gamma, hc.ghost, hc.subgrid),
-                         level_batched_jit(hc.gamma, hc.ghost, hc.subgrid)),
+                         level_batched_jit(hc.gamma, hc.ghost, hc.subgrid),
+                         epilogue=rk_stage_epilogue),
             KernelFamily("gravity",
                          gravity_batched_body(hc.ghost, hc.subgrid,
                                               cfg.g_const, cfg.relax_iters),
                          gravity_batched_jit(hc.ghost, hc.subgrid,
                                              cfg.g_const, cfg.relax_iters)),
         )
+        # hydro body consumes (subs, h); gravity joins the stage wave as
+        # itself (its launches carry no per-slot epilogue to fuse)
+        self._stage_families = (stage_family(self._families[0], 2),)
 
     def families(self):
         return self._families
@@ -446,3 +544,44 @@ class GravityScenario(Scenario):
             (hc.n_subgrids, hc.n_fields, p, p, p), self._dtype)
         h = jax.ShapeDtypeStruct((hc.n_subgrids,), self._dtype)
         return (("hydro_rhs", (subs, h)), ("gravity", (subs, h)))
+
+    # -- two-family epilogue-fused RK stages (DESIGN.md §10) ---------------
+    def stage_families(self):
+        return self._stage_families
+
+    def stage_populations(self, u0, v, dt, c0, c1):
+        hc = self.cfg.hydro
+        subs = extract_subgrids(v, hc.subgrid, hc.ghost, self.bc)
+        v_int = extract_subgrids(v, hc.subgrid, 0, self.bc)
+        u0_int = _cached_u0_interiors(
+            self, u0, v, v_int,
+            lambda u: extract_subgrids(u, hc.subgrid, 0, self.bc))
+        coeffs = stage_coeff_vectors(_coeff_cache(self), dt, c0, c1,
+                                     hc.n_subgrids, self._dtype)
+        return (
+            TaskPopulation(
+                self._stage_families[0].kernel,
+                (subs, self._h_vec, v_int, u0_int) + coeffs),
+            TaskPopulation("gravity", (subs, self._h_vec)),
+        )
+
+    def assemble_stage(self, state, outs, dt, c0, c1):
+        hc = self.cfg.hydro
+        staged = assemble_global(outs[0], hc.subgrid)
+        pg = assemble_global(outs[1], hc.subgrid)
+        return _apply_gravity_stage_source(state, staged, pg, c1 * dt)
+
+    def stage_warmup_parent_specs(self):
+        hc = self.cfg.hydro
+        n, s, p = hc.n_subgrids, hc.subgrid, hc.padded
+        dtype = self._dtype
+        scalar = jax.ShapeDtypeStruct((n,), dtype)
+        subs = jax.ShapeDtypeStruct((n, hc.n_fields, p, p, p), dtype)
+        return (
+            (self._stage_families[0].kernel, (
+                subs, scalar,
+                jax.ShapeDtypeStruct((n, hc.n_fields, s, s, s), dtype),
+                jax.ShapeDtypeStruct((n, hc.n_fields, s, s, s), dtype),
+                scalar, scalar, scalar)),
+            ("gravity", (subs, scalar)),
+        )

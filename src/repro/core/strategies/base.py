@@ -81,7 +81,11 @@ class Strategy:
     def run_stage(self, scenario, u0, v, dt, c0, c1, ctx: RunContext):
         """One epilogue-fused RK stage: launch the scenario's stage
         populations (gather -> body -> stage axpy as ONE program per
-        bucket) and return the next stage's state.  ``None`` = this
-        strategy has no fused-stage path; the runner falls back to
-        ``run_iteration`` + the global combine."""
+        bucket) and return the next stage's state.  A scenario may
+        declare several stage populations — per-level twins (AMR) or a
+        fused twin plus an un-fused partner family submitted in the same
+        wave (gravity, DESIGN.md §10); ``assemble_stage`` owns any
+        cross-family coupling.  ``None`` = this strategy has no
+        fused-stage path; the runner falls back to ``run_iteration`` +
+        the global combine."""
         return None

@@ -32,4 +32,4 @@ class FusedStrategy(Strategy):
         for pop in pops:
             outs.append(scenario.jitted_body(pop.kernel)(*pop.parents))
             ctx.stats["kernel_launches"] += 1
-        return scenario.assemble_stage(v, outs)
+        return scenario.assemble_stage(v, outs, dt, c0, c1)

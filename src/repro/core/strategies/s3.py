@@ -21,9 +21,13 @@ The seed's slice -> host-stack -> launch cycle survives as
 ``staging="host"`` (per-task submissions, measurable baseline for
 benchmarks/launch_overhead.py).  When the scenario declares per-slot
 epilogues, ``run_stage`` drives whole RK stages through the epilogue-fused
-twin families (DESIGN.md §9).  Stats report per-call DELTAS — the
-executor's own counters are cumulative, so the wave is snapshotted around
-the submissions.
+twin families (DESIGN.md §9) — and a stage wave may carry SEVERAL
+families at once: the AMR scenario submits one range per level twin, the
+gravity scenario its hydro twin AND the plain gravity family interleaved
+in the same wave (DESIGN.md §10), with any cross-family coupling applied
+by ``assemble_stage``.  Stats report per-call DELTAS — the executor's own
+counters are cumulative, so the wave is snapshotted around the
+submissions.
 """
 from __future__ import annotations
 
@@ -112,4 +116,4 @@ class S3Strategy(Strategy):
         ctx.stats["staging_s"] += exe.stats["staging_s"] - before_staging
         ctx.stats["kernel_launches"] += (exe.stats["launches"]
                                          - before_launches)
-        return scenario.assemble_stage(v, outs)
+        return scenario.assemble_stage(v, outs, dt, c0, c1)

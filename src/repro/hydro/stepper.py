@@ -68,9 +68,28 @@ def rk_stage_epilogue(dudt, v_int, u0_int, c0, c1, dt):
     Flux -> stage axpy compile to ONE XLA program per bucket, and a time
     step becomes three launches instead of three launches plus global
     combine traffic.  Coefficients arrive as per-task traced scalars, so a
-    single compiled bucket serves all three stages.
+    single compiled bucket serves all three stages.  Every hydro-family
+    scenario shares THIS epilogue — uniform Sedov, the per-level AMR
+    twins (traced ``h`` rides through the fused body untouched) and the
+    gravity scenario's hydro family (DESIGN.md §10).
     """
     return c0 * u0_int + c1 * (v_int + dt * dudt)
+
+
+def stage_coeff_vectors(cache: dict, dt, c0: float, c1: float, n: int,
+                        dtype):
+    """Per-task ``(c0, c1, dt)`` coefficient vectors for one epilogue-fused
+    RK stage, cached per ``(c0, c1, n)`` and rebuilt only when the ``dt``
+    object changes: fixed-dt drivers re-hit three cached broadcasts per
+    stage instead of dispatching three ``jnp.full``.  Shared by every
+    scenario implementing ``stage_populations`` (the caller owns the
+    cache dict, one per scenario instance)."""
+    key = (c0, c1, n)
+    hit = cache.get(key)
+    if hit is None or hit[0] is not dt:
+        hit = (dt, tuple(jnp.full((n,), c, dtype) for c in (c0, c1, dt)))
+        cache[key] = hit
+    return hit[1]
 
 
 def _rhs_global(u, cfg: HydroConfig, h: float, bc: str):

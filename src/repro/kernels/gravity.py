@@ -79,6 +79,30 @@ def subgrid_gravity(u_padded, h, *, ghost: int, subgrid: int,
                           g_const=g_const, n_iter=n_iter)
 
 
+def gravity_source_update(u, dudt, pg, scale=None):
+    """Add the gravity source to a hydro update: momentum gains
+    ``rho * g`` and energy gains ``S . g`` — the coupling Octo-Tiger
+    applies between its hydro and FMM solver families.  Pointwise, so it
+    serves assembled global grids and per-slot interiors alike.
+
+    ``scale=None`` adds the raw source (the rhs combine — kept
+    multiplication-free so that path's bits never move); a traced scalar
+    scales every term, which is how the epilogue-fused stage combine
+    folds its ``c1 * dt`` factor in (DESIGN.md §10):
+    ``c0*u0 + c1*(v + dt*(dudt + src)) == stage(dudt) + c1*dt*src``.
+    """
+    rho = u[0]
+    gx, gy, gz = pg[1], pg[2], pg[3]
+    terms = (rho * gx, rho * gy, rho * gz,
+             u[1] * gx + u[2] * gy + u[3] * gz)
+    if scale is not None:
+        terms = tuple(scale * t for t in terms)
+    return (dudt.at[1].add(terms[0])
+                .at[2].add(terms[1])
+                .at[3].add(terms[2])
+                .at[4].add(terms[3]))
+
+
 @lru_cache(maxsize=None)
 def gravity_batched_body(ghost: int, subgrid: int, g_const: float = 1.0,
                          n_iter: int = 8):

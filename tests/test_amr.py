@@ -170,6 +170,57 @@ def test_amr_warmup_precompiles_both_families(sedov_amr):
     np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
 
 
+# ---------------------------------------------------------------------------
+# epilogue-fused RK stages (DESIGN.md §10): per-level stage twins
+# ---------------------------------------------------------------------------
+
+def test_amr_epilogue_stage_path_bit_identical(sedov_amr):
+    """s3 / s2+s3 with fuse_epilogue drive each RK stage as one wave of
+    the per-level stage twins (traced h through the fused body + axpy) —
+    bit-identical to the fused stage reference, 2 launches per stage."""
+    st, dt, (ref_c, ref_f) = sedov_amr
+    state = (st.uc, st.uf)
+    fused = StrategyRunner(AMRSedovScenario(CONFIG), AggregationConfig(
+        strategy="fused", fuse_epilogue=True))
+    out_fc, out_ff = fused.rk3_step(state, dt)
+    for strategy, n_exec in [("s3", 1), ("s2+s3", 2)]:
+        r = StrategyRunner(AMRSedovScenario(CONFIG), AggregationConfig(
+            strategy=strategy, n_executors=n_exec, max_aggregated=16,
+            launch_watermark=WM, fuse_epilogue=True))
+        out_c, out_f = r.rk3_step(state, dt)
+        np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_fc))
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_ff))
+        # one launch per level population per stage, through the twin
+        assert r.stats["kernel_launches"] == 6
+        assert set(r.launches_by_family) == {"hydro_rhs_s8+epi"}
+    # the fused-stage step reassociates ~1e-5 vs the generic combine —
+    # allclose, never bit-equal across the two forms
+    for got, ref in ((out_fc, ref_c), (out_ff, ref_f)):
+        scale = float(np.max(np.abs(np.asarray(ref))))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5 * scale, rtol=1e-5)
+
+
+def test_amr_mixed_epilogue_two_stage_families():
+    """CONFIG_MIXED under fuse_epilogue: TWO stage-twin families aggregate
+    concurrently, still bit-identical to the fused stage reference."""
+    cfg = CONFIG_MIXED
+    st = amr_sedov_init(cfg)
+    dt = amr_courant_dt(st.uc, st.uf, cfg)
+    state = (st.uc, st.uf)
+    fused = StrategyRunner(AMRSedovScenario(cfg), AggregationConfig(
+        strategy="fused", fuse_epilogue=True))
+    ref_c, ref_f = fused.rk3_step(state, dt)
+    r = StrategyRunner(AMRSedovScenario(cfg), AggregationConfig(
+        strategy="s3", max_aggregated=16, launch_watermark=WM,
+        fuse_epilogue=True))
+    out_c, out_f = r.rk3_step(state, dt)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(ref_f))
+    assert set(r.launches_by_family) == {"hydro_rhs_s16+epi",
+                                         "hydro_rhs_s8+epi"}
+
+
 def test_amr_run_stays_physical():
     """Two Courant steps of the blast stay finite with positive density and
     pressure proxy (E - KE) on both levels."""

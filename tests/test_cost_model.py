@@ -1,0 +1,377 @@
+"""DESIGN.md §10: measured per-bucket cost models, wall-time ladder tuning
+and the watermark-adaptive flush policies.
+
+Invariants pinned here:
+
+* ``derive_ladder`` edge cases — an empty histogram yields the bare
+  remainder ladder ``(1,)``, a single wave larger than the cap seeds its
+  cap-split remainder (and an exact cap multiple seeds no remainder at
+  all), and exact cost-model ties resolve to the smaller compile
+  footprint;
+* ``BucketCostModel`` reports medians, interpolates between measured
+  bucket sizes, clamps below the smallest measurement and never
+  extrapolates under the largest one;
+* with ``cost_model=True`` the executor times the drain-reachable buckets
+  (``stats["regions"][fam]["cost_model"]``) and the retuned ladder is the
+  measured-fastest plan (``tuned_by == "cost_model"``), with the
+  ``inner_chunk`` memo keyed by backend so a timed choice never leaks
+  across devices;
+* ``executor.retune()`` is a NO-OP for regions without new waves since
+  the last retune (no degenerate ``(1,)`` ladder from an empty
+  histogram, no re-derivation from stale evidence);
+* property (hypothesis shim): the watermark/cost flush policies change
+  only WHEN launches fire — random two-family interleavings of ranges
+  and per-task submissions gather bit-identically to the eager policy
+  and to the direct computation, in order.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import greedy_launches
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AggregationConfig
+from repro.core import (
+    AggregationExecutor, BucketCostModel, derive_ladder, gather_futures,
+    ladder_candidates,
+)
+
+WM = 10 ** 9
+
+
+def _affine(x):
+    return 2.0 * x + 1.0
+
+
+def _affine_b(x):
+    return 3.0 * x - 2.0
+
+
+def _linear_model(buckets, per_slot=1.0):
+    """t(b) = per_slot * b: zero launch overhead, every plan ties."""
+    m = BucketCostModel()
+    for b in buckets:
+        m.record(b, per_slot * b)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# derive_ladder edge cases
+# ---------------------------------------------------------------------------
+
+def test_derive_ladder_empty_hist_is_remainder_only():
+    """No evidence -> the mandatory remainder bucket alone, never a made-up
+    ladder (retune() guards this path, but the function must be safe)."""
+    assert derive_ladder({}, cap=64, budget=4) == (1,)
+    assert derive_ladder({0: 3, -2: 1}, cap=64, budget=4) == (1,)
+
+
+def test_derive_ladder_single_over_cap_wave_seeds_remainder():
+    """ONE observed 70-wave under cap 64 must keep {64, 6} as a pair: the
+    cap bucket without its remainder would drain 64 + six 1s."""
+    ladder = derive_ladder({70: 1}, cap=64, budget=4)
+    assert 64 in ladder and 6 in ladder
+    assert greedy_launches(70, ladder) == 2
+
+
+def test_derive_ladder_exact_cap_multiple_has_no_remainder():
+    """A 128-wave under cap 64 splits 64+64 — there is no remainder to
+    seed, and the drain is two cap launches."""
+    ladder = derive_ladder({128: 3}, cap=64, budget=4)
+    assert 64 in ladder
+    assert greedy_launches(128, ladder) == 2
+
+
+def test_derive_ladder_cost_tie_resolves_to_smaller_footprint():
+    """Under a zero-overhead linear model every decomposition of a wave
+    predicts the same wall time — the tuner must then keep the SMALLEST
+    compile footprint (1,), dropping even the seeded mega bucket."""
+    model = _linear_model((1, 2, 24, 64))
+    assert derive_ladder({24: 3}, cap=64, budget=4, cost_model=model) == (1,)
+
+
+def test_derive_ladder_overhead_model_prefers_mega_bucket():
+    """Launch-overhead-dominated measurements reproduce the §9 behavior:
+    one bucket covering the steady wave."""
+    m = BucketCostModel()
+    for b in ladder_candidates({24: 3}, 64):
+        m.record(b, 1.0 + 0.01 * b)
+    assert derive_ladder({24: 3}, cap=64, budget=4, cost_model=m) == (1, 24)
+
+
+def test_derive_ladder_superlinear_model_rejects_mega_bucket():
+    """Measured time CAN say the cap bucket is pessimal (e.g. a flat vmap
+    blowing the cache): the tuner must drop the seeded cap and cover the
+    wave with the cheaper halves instead — launch-count tuning can never
+    learn this."""
+    m = BucketCostModel()
+    m.record(1, 1.0)
+    m.record(32, 2.0)
+    m.record(64, 100.0)
+    ladder = derive_ladder({64: 3}, cap=64, budget=4, cost_model=m)
+    assert 64 not in ladder and 32 in ladder
+
+
+# ---------------------------------------------------------------------------
+# BucketCostModel
+# ---------------------------------------------------------------------------
+
+def test_cost_model_median_and_interpolation():
+    m = BucketCostModel()
+    for t in (1.0, 3.0, 100.0):      # median 3.0, robust to the outlier
+        m.record(4, t)
+    m.record(8, 5.0)
+    assert m.time(4) == 3.0
+    assert m.predict(6) == pytest.approx(4.0)        # midpoint of 3 and 5
+    assert m.predict(2) == 3.0                       # clamped below min
+    assert m.predict(16) == pytest.approx(9.0)       # last-segment slope
+    assert m.predict_seq((4, 8)) == pytest.approx(8.0)
+
+
+def test_cost_model_floor_and_empty():
+    m = BucketCostModel()
+    with pytest.raises(ValueError):
+        m.predict(4)
+    m.record(8, 5.0)
+    m.record(16, 1.0)                 # noisy downward slope...
+    assert m.predict(64) == 1.0       # ...never extrapolates below max's t
+    m.clear()
+    assert not m.measured()
+
+
+# ---------------------------------------------------------------------------
+# executor end-to-end: measured tuning + persistence
+# ---------------------------------------------------------------------------
+
+def test_cost_model_retune_measures_and_tunes():
+    cfg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM, autotune=True,
+                            autotune_warmup=1, cost_model=True,
+                            cost_samples=1)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(32.0).reshape(16, 2)
+    for _ in range(3):
+        fut = exe.submit_range((parent,), 0, 16)
+        exe.flush()
+    region = next(iter(exe.regions.values()))
+    assert region.stats["tuned_by"] == "cost_model"
+    table = region.stats["cost_model"]
+    assert table and all(ms >= 0 for ms in table.values())
+    # every drain-reachable candidate of the observed waves was timed
+    assert set(table) == {b for b in ladder_candidates({16: 1}, 16)}
+    assert 16 in region.buckets       # the steady wave stays one launch
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+def test_chunk_memo_keyed_by_backend():
+    """The inner_chunk memo must never serve a choice timed on another
+    backend: every entry's key leads with (backend, device kind)."""
+    from repro.core.aggregation import _CHUNK_TUNE_MEMO, _backend_key
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM, inner_chunk="auto")
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.zeros((8, 4))
+    exe.warmup(parent_shapes=(parent,))
+    assert _CHUNK_TUNE_MEMO, "auto warmup should have tuned a chunk"
+    assert all(k[0] == _backend_key() for k in _CHUNK_TUNE_MEMO)
+
+
+# ---------------------------------------------------------------------------
+# retune() no-op semantics
+# ---------------------------------------------------------------------------
+
+def test_retune_empty_hist_region_is_noop():
+    """A region opened by warmup alone (no waves) must keep its configured
+    ladder — not collapse to a degenerate (1,)."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=8,
+                            launch_watermark=WM, autotune=True)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    exe.warmup(parent_shapes=(jnp.zeros((8, 4)),))
+    region = next(iter(exe.regions.values()))
+    before = region.buckets
+    assert len(before) > 1
+    ladders = exe.retune()
+    assert region.buckets == before
+    assert list(ladders.values()) == [before]
+
+
+def test_retune_without_new_waves_is_noop():
+    """retune() re-derives only from NEW evidence: with no waves since the
+    last retune it must not touch the region (asserted by poisoning the
+    histogram — stale retunes would pick the poison up)."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(24.0).reshape(12, 2)
+    exe.submit_range((parent,), 0, 12)
+    exe.flush()
+    first = exe.retune()
+    region = next(iter(exe.regions.values()))
+    assert 12 in region.buckets
+    region.stats["queue_hist"][5] = 100          # poison: stale evidence
+    assert exe.retune() == first                 # no-op: poison ignored
+    assert 5 not in region.buckets
+    exe.submit_range((parent,), 0, 5)            # a REAL new wave
+    exe.flush()
+    exe.retune()
+    assert 5 in region.buckets                   # new evidence picked up
+
+
+def test_no_retune_churn_when_tuned_ladder_splits_the_wave():
+    """A measured tuner may pick a ladder whose max bucket is BELOW the
+    steady wave (splitting predicted faster).  Same-size waves must then
+    not re-arm the tuner — re-arming keys on new evidence (a peak beyond
+    the tuned histogram), never on the ladder shape, or every wave would
+    pay a full retune (chunk re-sweep, measurement, AOT) mid-flight."""
+    cfg = AggregationConfig(strategy="s3", max_aggregated=16,
+                            launch_watermark=WM, autotune=True,
+                            autotune_warmup=1)
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    parent = jnp.arange(16.0).reshape(8, 2)
+    exe.submit_range((parent,), 0, 8)
+    exe.flush()                                   # retune on hist {8: 1}
+    region = next(iter(exe.regions.values()))
+    assert region.tuned
+    # simulate the measured verdict: splitting the 8-wave beats bucket 8
+    region.buckets = (1, 2)
+    region.stats["ladder"] = [1, 2]
+    retuned_at = region._retuned_waves
+    fut = exe.submit_range((parent,), 0, 8)       # same-size wave
+    exe.flush()
+    assert region.tuned                           # NOT re-armed
+    assert region._retuned_waves == retuned_at    # no retune ran
+    assert exe.stats["aggregated_hist"].get(2, 0) >= 4   # drained split
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(2.0 * parent + 1.0))
+    big = jnp.arange(32.0).reshape(16, 2)         # genuinely new evidence
+    exe.submit_range((big,), 0, 16)
+    exe.flush()
+    assert 16 in region.buckets                   # re-armed and retuned
+
+
+# ---------------------------------------------------------------------------
+# flush policies
+# ---------------------------------------------------------------------------
+
+def test_unknown_flush_policy_fails_fast():
+    with pytest.raises(ValueError) as ei:
+        AggregationExecutor(jax.vmap(_affine),
+                            AggregationConfig(flush_policy="bogus"))
+    assert "eager, watermark, cost" in str(ei.value)
+
+
+def test_watermark_policy_waits_for_learned_peak():
+    """After one bulk wave teaches the peak, per-task submissions under
+    the watermark policy stop leaking partial buckets into idle
+    executors: the whole second wave drains as ONE bucket at flush."""
+    parent = jnp.arange(16.0).reshape(8, 2)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=32,
+                            launch_watermark=1, flush_policy="watermark")
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    exe.submit_range((parent,), 0, 8)
+    exe.flush()                                  # peak 8 learned
+    before = exe.stats["launches"]
+    futs = [exe.submit_indexed((parent,), i) for i in range(8)]
+    exe.flush()
+    assert exe.stats["launches"] == before + 1   # one bucket-8 launch
+    np.testing.assert_array_equal(np.asarray(gather_futures(futs)),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+def test_cost_policy_drain_decision_follows_model():
+    """The "cost" policy drains a partial queue early exactly when the
+    measured model says the split beats the one-shot wave."""
+    parent = jnp.arange(16.0).reshape(8, 2)
+    cfg = AggregationConfig(strategy="s3", max_aggregated=32,
+                            launch_watermark=1, flush_policy="cost")
+    exe = AggregationExecutor(jax.vmap(_affine), cfg)
+    exe.submit_range((parent,), 0, 8)
+    exe.flush()                                  # peak 8 learned
+    region = next(iter(exe.regions.values()))
+    assert exe._idle_drain_pays(region, 4)       # no model yet: eager
+    for b in (1, 2, 4, 8):                       # overhead-dominated:
+        region.cost.record(b, 1.0 + 0.01 * b)    # splitting costs a launch
+    assert not exe._idle_drain_pays(region, 4)
+    assert exe._idle_drain_pays(region, 8)       # a full wave always goes
+    region.cost.clear()
+    region.cost.record(1, 1.0)
+    region.cost.record(4, 4.0)
+    region.cost.record(8, 100.0)                 # superlinear mega bucket:
+    assert exe._idle_drain_pays(region, 4)       # splitting is free
+    futs = [exe.submit_indexed((parent,), i) for i in range(8)]
+    exe.flush()                                  # correctness regardless
+    np.testing.assert_array_equal(np.asarray(gather_futures(futs)),
+                                  np.asarray(2.0 * parent + 1.0))
+
+
+@given(n_a=st.integers(1, 20), n_b=st.integers(0, 20),
+       max_agg=st.integers(2, 12), seed=st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_flush_policies_bit_identical_on_two_family_interleavings(
+        n_a, n_b, max_agg, seed):
+    """Property: flush policies affect WHEN launches fire, never what they
+    compute — random two-family interleavings of ranges and per-task
+    submissions gather bit-identically under eager/watermark/cost, and
+    match the direct computation in order."""
+    pa = jnp.arange(float(n_a * 2)).reshape(n_a, 2)
+    pb = jnp.arange(float(n_b * 3)).reshape(n_b, 3) if n_b else None
+
+    def plan(rng, n):
+        out, i = [], 0
+        while i < n:
+            span = rng.randint(1, n - i)
+            if span > 1 and rng.random() < 0.6:
+                out.append((i, span))
+            else:
+                out.append((i, 1))
+                span = 1
+            i += span
+        return out
+
+    outs = {}
+    for policy in ("eager", "watermark", "cost"):
+        rng = random.Random(seed)                # SAME submissions per run
+        cfg = AggregationConfig(strategy="s3", max_aggregated=max_agg,
+                                launch_watermark=1, flush_policy=policy)
+        exe = AggregationExecutor(jax.vmap(_affine), cfg)
+        exe.register("b", jax.vmap(_affine_b))
+        futs_a, futs_b = [], []
+        for wave in range(2):                    # wave 1 teaches the peaks
+            lanes = [iter(plan(rng, n_a)), iter(plan(rng, n_b))]
+            if wave == 1 and policy == "cost":   # arm the model mid-run
+                for region in exe.regions.values():
+                    for b in range(1, max_agg + 1):
+                        region.cost.record(b, 1.0 + 0.01 * b)
+            live = True
+            while live:
+                live = False
+                for lane, (fam, par, sink) in zip(lanes, [
+                        ("region", pa, futs_a), ("b", pb, futs_b)]):
+                    nxt = next(lane, None)
+                    if nxt is None:
+                        continue
+                    live = True
+                    start, span = nxt
+                    if span > 1:
+                        sink.append(exe.submit_range((par,), start, span,
+                                                     kernel=fam))
+                    else:
+                        sink.append(exe.submit(
+                            *(par[start],), kernel=fam))
+            exe.flush()
+        got_a = np.asarray(gather_futures(futs_a))
+        got_b = np.asarray(gather_futures(futs_b)) if futs_b else None
+        outs[policy] = (got_a, got_b)
+    direct_a = np.tile(np.asarray(2.0 * pa + 1.0), (2, 1))
+    for policy, (got_a, got_b) in outs.items():
+        np.testing.assert_array_equal(got_a, direct_a, err_msg=policy)
+        if got_b is not None:
+            np.testing.assert_array_equal(
+                got_b, np.tile(np.asarray(3.0 * pb - 2.0), (2, 1)),
+                err_msg=policy)
+    np.testing.assert_array_equal(outs["watermark"][0], outs["eager"][0])
+    np.testing.assert_array_equal(outs["cost"][0], outs["eager"][0])

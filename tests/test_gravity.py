@@ -144,6 +144,35 @@ def test_gravity_s2_matches_reference(sedov_grav):
     assert r.launches_by_family == {"hydro_rhs": 3 * n, "gravity": 3 * n}
 
 
+# ---------------------------------------------------------------------------
+# two-family epilogue-fused RK stages (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def test_gravity_two_family_epilogue_stage_bit_identical(sedov_grav):
+    """fuse_epilogue drives each RK stage as ONE wave carrying BOTH
+    families — the hydro axpy-fused twin and the unchanged gravity
+    relaxation — with the cross-family coupling entering at
+    ``assemble_stage``; bit-identical to the fused stage reference."""
+    st, dt, ref = sedov_grav
+    fused = StrategyRunner(GravityScenario(CFG), AggregationConfig(
+        strategy="fused", fuse_epilogue=True))
+    ref_stage = fused.rk3_step(st.u, dt)
+    for strategy, n_exec in [("s3", 1), ("s2+s3", 2)]:
+        r = StrategyRunner(GravityScenario(CFG), AggregationConfig(
+            strategy=strategy, n_executors=n_exec, max_aggregated=16,
+            launch_watermark=WM, fuse_epilogue=True))
+        out = r.rk3_step(st.u, dt)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(ref_stage))
+        # both families launch once per stage, interleaved in one wave
+        assert r.launches_by_family == {"hydro_rhs+epi": 3, "gravity": 3}
+        assert r.stats["kernel_launches"] == 6
+    # reassociates ~1e-5 vs the eager global combine — allclose only
+    scale = float(np.max(np.abs(np.asarray(ref))))
+    np.testing.assert_allclose(np.asarray(ref_stage), np.asarray(ref),
+                               atol=1e-5 * scale, rtol=1e-5)
+
+
 def test_gravity_warmup_precompiles_both_families(sedov_grav):
     st, dt, ref = sedov_grav
     agg = AggregationConfig(strategy="s3", max_aggregated=16,
