@@ -37,6 +37,25 @@ def time_per_step(step_fn: Callable, state, dt, steps: int,
     return statistics.median(samples), samples
 
 
+def paired_overhead_pct(base_fn: Callable, test_fn: Callable, state, dt,
+                        steps: int, repeats: int
+                        ) -> Tuple[float, List[float]]:
+    """Median paired overhead of ``test_fn`` vs ``base_fn`` in percent,
+    plus the raw per-repeat ratios.  Run-to-run drift on this box exceeds
+    the effects an A/B row pair measures (see ``time_per_step``), so the
+    two step functions are timed back-to-back WITHIN each repeat — the
+    per-repeat ratio cancels slow drift, the median rejects spikes.  At
+    least 5 paired repeats run even in smoke mode (a single ratio is no
+    better than the unpaired difference it replaces)."""
+    ratios = []
+    for _ in range(max(5, repeats)):
+        base_s, _ = time_per_step(base_fn, state, dt, steps, 1)
+        test_s, _ = time_per_step(test_fn, state, dt, steps, 1)
+        ratios.append(test_s / base_s)
+    return (round(100.0 * (statistics.median(ratios) - 1.0), 2),
+            [round(r, 4) for r in ratios])
+
+
 def region_ladders(runner) -> dict:
     """Per-family bucket ladders of a runner's aggregation executor (the
     auto-tuner's output surface; empty without an executor)."""

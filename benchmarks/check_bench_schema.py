@@ -29,9 +29,11 @@ ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
 # present; *_ladder* rows require ladder+hists, *cost* rows additionally
 # require the measured cost table and the configured flush policy
 OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists",
-                     "cost_model", "flush_policy")
+                     "cost_model", "flush_policy", "guard", "faults",
+                     "guard_overhead_pct", "guard_overhead_ratios")
 
 FLUSH_POLICIES = ("eager", "watermark", "cost")
+GUARD_POLICIES = ("off", "finite")
 
 
 def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
@@ -69,7 +71,32 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
     if policy is not None and policy not in FLUSH_POLICIES:
         problems.append(f"{path}: rows[{i}] 'flush_policy' must be one of "
                         f"{FLUSH_POLICIES}, got {policy!r}")
+    guard = row.get("guard")
+    if guard is not None and guard not in GUARD_POLICIES:
+        problems.append(f"{path}: rows[{i}] 'guard' must be one of "
+                        f"{GUARD_POLICIES}, got {guard!r}")
+    faults = row.get("faults")
+    if faults is not None and not (
+            isinstance(faults, dict)
+            and all(isinstance(v, dict)
+                    and all(isinstance(c, (int, list)) for c in v.values())
+                    for v in faults.values())):
+        problems.append(f"{path}: rows[{i}] 'faults' must map family -> "
+                        f"fault-counter dict (DESIGN.md §11 stats schema)")
+    pct = row.get("guard_overhead_pct")
+    if pct is not None and not isinstance(pct, (int, float)):
+        problems.append(f"{path}: rows[{i}] 'guard_overhead_pct' must be "
+                        f"a number")
+    ratios = row.get("guard_overhead_ratios")
+    if ratios is not None and not (
+            isinstance(ratios, list) and ratios
+            and all(isinstance(x, (int, float)) and x > 0 for x in ratios)):
+        problems.append(f"{path}: rows[{i}] 'guard_overhead_ratios' must "
+                        f"be a non-empty list of positive ratios")
     tag = str(row.get("config", ""))
+    if "guard" in tag and (guard is None or faults is None):
+        problems.append(f"{path}: rows[{i}] is a guard row but lacks "
+                        f"'guard'/'faults'")
     if "ladder" in tag and (ladder is None or hists is None):
         problems.append(f"{path}: rows[{i}] is a ladder-sweep row but "
                         f"lacks 'ladder'/'region_hists'")

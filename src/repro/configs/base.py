@@ -213,6 +213,24 @@ class AggregationConfig:
     # WHEN launches fire, never submission order, so results stay
     # bit-identical to eager (flush() drains every queue regardless).
     flush_policy: str = "eager"       # "eager" | "watermark" | "cost"
+    # Blast-radius containment (DESIGN.md §11): with ``guard="finite"``,
+    # ``flush()`` runs ONE scalar all-finite check per drained launch; a
+    # tripped bucket is re-executed by bisection down the ladder until the
+    # offending slot(s) are isolated — surviving futures are fulfilled
+    # bit-identically (batch decomposition is exact), only culprits are
+    # marked failed.  "off" (default) adds zero work to the hot path.
+    guard: str = "off"                # "off" | "finite"
+    # Degraded-mode policy: a launch-site failure is retried up to
+    # ``max_bucket_retries`` times (exponential backoff from
+    # ``retry_backoff_s``); a bucket whose compile fails — or whose
+    # launches keep failing past the retries — is banned from the ladder
+    # and its tasks re-drained through smaller rungs (bucket 1 is never
+    # banned: it is the per-task degraded floor).  A task index tripping
+    # the guard ``quarantine_threshold`` times is quarantined: later
+    # bisections short-circuit it straight to a per-task re-execution.
+    max_bucket_retries: int = 2
+    retry_backoff_s: float = 0.0
+    quarantine_threshold: int = 2
 
     def bucket_sizes(self) -> Tuple[int, ...]:
         if self.buckets:

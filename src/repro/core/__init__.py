@@ -4,6 +4,9 @@
 * ``buffers``     — recycled staging slabs (CPPuddle allocator analogue)
 * ``aggregation`` — the on-the-fly explicit work-aggregation executor (S3),
                     a multi-region runtime keyed by ``TaskSignature``
+* ``faults``      — deterministic fault injection + the error taxonomy
+                    behind the ``guard="finite"`` containment path
+                    (DESIGN.md §11)
 * ``scenario``    — the Scenario plugin protocol: declarative workloads
                     (uniform Sedov, two-level AMR, hydro+gravity) exposing
                     kernel families, task populations and fused references
@@ -20,6 +23,11 @@ from repro.core.aggregation import (
 )
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import DeviceExecutor, ExecutorPool
+from repro.core.faults import (
+    BucketCompileError, FaultError, FaultInjector, FaultSpec,
+    LaunchFaultError, NonFiniteStateError, QuarantineList, RegionFaultError,
+    TaskFailedError, all_finite,
+)
 from repro.core.scenario import (
     AMRSedovScenario, GravityScenario, KernelFamily, Scenario,
     TaskPopulation, UniformSedovScenario, stage_family, xla_task_body,
@@ -35,6 +43,9 @@ __all__ = [
     "gather_futures", "greedy_launches", "ladder_candidates",
     "reset_regions",
     "BufferPool", "DEFAULT_POOL", "SlotRing", "DeviceExecutor", "ExecutorPool",
+    "FaultError", "FaultSpec", "FaultInjector", "BucketCompileError",
+    "LaunchFaultError", "TaskFailedError", "RegionFaultError",
+    "NonFiniteStateError", "QuarantineList", "all_finite",
     "Scenario", "KernelFamily", "TaskPopulation", "stage_family",
     "UniformSedovScenario", "AMRSedovScenario", "GravityScenario",
     "Strategy", "RunContext", "StrategyRunner",

@@ -58,6 +58,11 @@ import numpy as np
 from repro.configs.base import AggregationConfig
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import ExecutorPool
+from repro.core.faults import (
+    BucketCompileError, FaultInjector, LaunchFaultError, QuarantineList,
+    RegionFaultError, TaskFailedError, all_finite, all_finite_async,
+    poison_slots,
+)
 
 
 # inner-chunk auto-tune memo: (backend, body id, bucket, task specs) ->
@@ -90,23 +95,47 @@ class TaskFuture:
     and callers that want the whole batch back should use
     :func:`gather_futures`, which recognises futures covering a full launch
     and returns the batched output itself with zero copies.
+
+    Under ``guard="finite"`` a future may resolve FAILED instead of to a
+    value (DESIGN.md §11): ``failed()`` reports it, ``error()`` carries the
+    :class:`~repro.core.faults.TaskFailedError`, and ``result()`` raises it
+    — a contained fault never returns garbage.
     """
 
-    __slots__ = ("_value", "_batch", "_slot", "_done")
+    __slots__ = ("_value", "_batch", "_slot", "_done", "_error")
 
     def __init__(self):
         self._value = None
         self._batch = None
         self._slot = -1
         self._done = False
+        self._error = None
 
     def _fulfil(self, batch_out: Any, slot: int) -> None:
         self._batch, self._slot, self._done = batch_out, slot, True
 
+    def _fail(self, err: Exception) -> None:
+        self._error, self._done = err, True
+        self._batch = self._value = None
+
+    def _retract(self) -> None:
+        """Un-fulfil: the launch that fulfilled this future tripped the
+        guard; containment will re-fulfil (or fail) it."""
+        self._done = False
+        self._batch = self._value = None
+
     def ready(self) -> bool:
         return self._done
 
+    def failed(self) -> bool:
+        return self._error is not None
+
+    def error(self) -> Optional[Exception]:
+        return self._error
+
     def result(self) -> Any:
+        if self._error is not None:
+            raise self._error
         if not self._done:
             raise RuntimeError("task not launched yet — call executor.flush()")
         if self._value is None:
@@ -127,14 +156,21 @@ class RangeFuture:
     covered the whole range in order, which is the steady-state fast path
     (``submit_range`` of a full wave -> one mega-bucket launch -> the
     launch output IS the result).
+
+    Containment (DESIGN.md §11) may mark individual offsets of the range
+    FAILED: ``failed_indices()`` lists them, ``error(i)`` returns a task's
+    :class:`~repro.core.faults.TaskFailedError`, ``task_result(i)`` reads
+    one surviving task, and ``result()``/``gather_futures`` raise rather
+    than assemble a batch with garbage slots in it.
     """
 
-    __slots__ = ("_parts", "_count", "_value")
+    __slots__ = ("_parts", "_count", "_value", "_failed")
 
     def __init__(self, count: int):
         self._parts: List[Tuple[int, Any, int, int]] = []
         self._count = count
         self._value = None
+        self._failed: Dict[int, Exception] = {}
 
     def __len__(self) -> int:
         return self._count
@@ -143,13 +179,40 @@ class RangeFuture:
                       n: int) -> None:
         self._parts.append((offset, batch_out, slot, n))
 
+    def _fail_range(self, offset: int, n: int, err: Exception) -> None:
+        for i in range(offset, offset + n):
+            self._failed[i] = err
+
+    def _retract(self, batch_out: Any) -> None:
+        """Drop every segment a tripped launch contributed (containment
+        re-fulfils or fails those offsets after bisection)."""
+        self._parts = [p for p in self._parts if p[1] is not batch_out]
+
     def ready(self) -> bool:
         if self._value is not None:     # resolved (parts were released)
             return True
-        return sum(p[3] for p in self._parts) == self._count
+        return (sum(p[3] for p in self._parts) + len(self._failed)
+                == self._count)
+
+    def failed(self) -> bool:
+        return bool(self._failed)
+
+    def failed_indices(self) -> List[int]:
+        return sorted(self._failed)
+
+    def error(self, index: Optional[int] = None) -> Optional[Exception]:
+        if index is not None:
+            return self._failed.get(index)
+        return next(iter(self._failed.values()), None)
 
     def result(self) -> Any:
         """The whole range as one batched pytree (task axis leading)."""
+        if self._failed:
+            raise TaskFailedError(
+                f"{len(self._failed)} of {self._count} tasks in this range "
+                f"failed (indices {self.failed_indices()}) — read survivors "
+                f"individually with task_result()",
+                task_ids=self.failed_indices())
         if self._value is None:
             if not self.ready():
                 raise RuntimeError(
@@ -161,7 +224,27 @@ class RangeFuture:
             self._parts = []
         return self._value
 
+    def task_result(self, index: int) -> Any:
+        """One task's result (raises its error if containment failed it)."""
+        if index in self._failed:
+            raise self._failed[index]
+        if not 0 <= index < self._count:
+            raise IndexError(f"task {index} out of range [0, {self._count})")
+        if self._value is not None:
+            return jax.tree_util.tree_map(lambda x: x[index], self._value)
+        for off, batch, slot, n in self._parts:
+            if off <= index < off + n:
+                i = slot + (index - off)
+                return jax.tree_util.tree_map(lambda x: x[i], batch)
+        raise RuntimeError("task not launched yet — call executor.flush()")
+
     def _segments(self):
+        if self._failed:
+            raise TaskFailedError(
+                f"range contains {len(self._failed)} failed tasks "
+                f"(indices {self.failed_indices()}) — gather_futures would "
+                f"assemble garbage slots; read survivors with task_result()",
+                task_ids=self.failed_indices())
         if self._value is not None:
             leaves = jax.tree_util.tree_leaves(self._value)
             yield self._value, 0, leaves[0].shape[0]
@@ -250,6 +333,8 @@ def gather_futures(futs: Sequence[Any]) -> Any:
         if isinstance(f, RangeFuture):
             segments.extend(f._segments())
             continue
+        if f._error is not None:      # a failed task never assembles
+            raise f._error
         if not f._done:
             raise RuntimeError("task not launched yet — call executor.flush()")
         if f._batch is None:          # already resolved individually
@@ -324,18 +409,70 @@ class _Pending:
     args: Optional[Tuple[Any, ...]] = None        # host mode
     count: int = 1                    # tasks in this entry (>1: slot range)
     fut_offset: int = 0               # this entry's offset in its RangeFuture
+    wave_index: int = 0               # first task's wave-relative id (§11)
 
     def split(self, n: int) -> Tuple["_Pending", "_Pending"]:
         """Split a contiguous range entry: first ``n`` tasks / the rest.
         Both halves share the future (each fulfils its own offset)."""
         assert 0 < n < self.count and self.views is not None
         head = _Pending(future=self.future, views=self.views, count=n,
-                        fut_offset=self.fut_offset)
+                        fut_offset=self.fut_offset,
+                        wave_index=self.wave_index)
         tail = _Pending(
             future=self.future,
             views=tuple(SlotView(v.parent, v.index + n) for v in self.views),
-            count=self.count - n, fut_offset=self.fut_offset + n)
+            count=self.count - n, fut_offset=self.fut_offset + n,
+            wave_index=self.wave_index + n)
         return head, tail
+
+
+@dataclass
+class _LaunchRecord:
+    """Everything the post-drain guard needs to audit ONE launch and, on a
+    trip, re-execute arbitrary slot subsets of it (DESIGN.md §11).
+
+    ``parents`` + ``indices`` are the re-execution recipe: whatever the
+    staging mode was, subset ``S`` re-runs as
+    ``region.gather_jit(indices[S], *parents)`` — for ref staging the
+    parents are the submitted parent arrays, for ring staging the launched
+    ring buffers (held by reference, so a post-launch ``swap`` cannot
+    invalidate them), for host staging the stacked input batch itself.
+    ``poisoned`` records which wave-relative task ids carried an injected
+    payload fault at launch time; re-executions re-apply exactly those (the
+    poison is a property of the TASK, so bisection converges on it)."""
+
+    region: "_Region"
+    out: Any                          # the launch's batched output
+    k: int                            # bucket size
+    parents: Tuple[Any, ...]          # arrays gather_jit re-executes against
+    indices: List[int]                # per-position absolute parent index
+    tasks: List["_Pending"]           # the entries this launch fulfilled
+    wave_ids: List[int]               # per-position wave-relative task id
+    wave: int                         # region wave counter at launch
+    poisoned: Dict[int, str]          # wave id -> injected payload mode
+    verdict: Any = True               # in-flight all-finite device scalar,
+                                      # dispatched at launch, forced at flush
+
+
+def _split_taken(entries: List[_Pending], n: int
+                 ) -> Tuple[List[_Pending], List[_Pending]]:
+    """Split an already-TAKEN entry list at task boundary ``n`` (degraded
+    re-draining: the queue bookkeeping was done by ``_take``, only the
+    entries themselves still need carving to the smaller bucket)."""
+    head: List[_Pending] = []
+    rest = list(entries)
+    need = n
+    while need:
+        e = rest[0]
+        if e.count <= need:
+            head.append(rest.pop(0))
+            need -= e.count
+        else:
+            h, t = e.split(need)
+            rest[0] = t
+            head.append(h)
+            need = 0
+    return head, rest
 
 
 class BucketCostModel:
@@ -565,11 +702,12 @@ class _Region:
                  "host_jit", "gather_jit", "stats", "buckets", "chunk",
                  "chunk_tuned", "queued_tasks", "waves", "tuned",
                  "_wave_peak", "_aot_parents", "cost", "_retuned_waves",
-                 "_retuned_peak", "_donate")
+                 "_retuned_peak", "_donate", "quarantine", "bad_buckets",
+                 "_wave_submitted")
 
     def __init__(self, signature: TaskSignature, batched_fn: Callable,
                  donate: bool, buckets: Tuple[int, ...] = (1,),
-                 chunk: int = 0):
+                 chunk: int = 0, quarantine_threshold: int = 2):
         self.signature = signature
         self.batched_fn = batched_fn
         self._donate = donate
@@ -587,11 +725,20 @@ class _Region:
         self.cost = BucketCostModel()     # measured bucket wall times (§10)
         self._retuned_waves = -1      # waves counter at the last retune
         self._retuned_peak = 0        # largest wave peak seen at last retune
+        # blast-radius containment state (DESIGN.md §11)
+        self.quarantine = QuarantineList(threshold=quarantine_threshold)
+        self.bad_buckets: set = set()     # rungs banned by degraded mode
+        self._wave_submitted = 0      # wave-relative task ids, reset per wave
         # shared shape-polymorphic wrappers (jit re-specializes per shape,
         # so ONE wrapper serves every bucket / parent shape)
         self.reset_compiled()
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
-                      "queue_hist": {}, "ladder": list(buckets)}
+                      "queue_hist": {}, "ladder": list(buckets),
+                      "faults": {"trips": 0, "bisection_launches": 0,
+                                 "failed_tasks": 0, "quarantined": [],
+                                 "retries": 0, "compile_failures": 0,
+                                 "launch_failures": 0,
+                                 "degraded_launches": 0}}
 
     # -- bucketed programs -------------------------------------------------
     def _eval(self, *stacked):
@@ -711,7 +858,8 @@ class AggregationExecutor:
                  pool: Optional[ExecutorPool] = None,
                  buffer_pool: Optional[BufferPool] = None,
                  donate: bool = False,
-                 name: str = "region"):
+                 name: str = "region",
+                 fault_injector: Optional[FaultInjector] = None):
         self.name = name
         self.config = config or AggregationConfig()
         self.pool = pool or ExecutorPool(self.config.n_executors)
@@ -732,6 +880,19 @@ class AggregationExecutor:
         self._cost_on = bool(getattr(self.config, "cost_model", False))
         self._cost_samples = max(1, int(getattr(self.config,
                                                 "cost_samples", 3)))
+        # blast-radius containment (DESIGN.md §11)
+        self._guard = getattr(self.config, "guard", "off")
+        if self._guard not in ("off", "finite"):
+            raise ValueError(f"unknown guard mode {self._guard!r} — valid "
+                             f"modes: off, finite")
+        self._injector = fault_injector
+        self._max_retries = max(0, int(getattr(self.config,
+                                               "max_bucket_retries", 2)))
+        self._retry_backoff = float(getattr(self.config,
+                                            "retry_backoff_s", 0.0))
+        self._qthreshold = max(1, int(getattr(self.config,
+                                              "quarantine_threshold", 2)))
+        self._guard_records: List[_LaunchRecord] = []
         self._bodies: Dict[str, Callable] = {}
         self._regions: Dict[TaskSignature, _Region] = {}
         self._default_kernel: Optional[str] = None
@@ -763,6 +924,14 @@ class AggregationExecutor:
             self._default_kernel = kernel
         return kernel
 
+    def set_fault_injector(self,
+                           injector: Optional[FaultInjector]) -> None:
+        """Attach (or detach, with None) a deterministic fault schedule.
+        Injection sites fire on the paths they model — payload faults on
+        launch outputs, ring corruption at submission, compile/launch
+        faults at dispatch — so containment is exercised end to end."""
+        self._injector = injector
+
     def _region_for(self, kernel: str, args: Sequence[Any]) -> _Region:
         sig = TaskSignature.from_args(kernel, args)
         region = self._regions.get(sig)
@@ -772,7 +941,8 @@ class AggregationExecutor:
                 raise KeyError(f"no batched body registered for kernel "
                                f"{kernel!r} (have {sorted(self._bodies)})")
             region = _Region(sig, body, self._donate, buckets=self._buckets,
-                             chunk=self._chunk)
+                             chunk=self._chunk,
+                             quarantine_threshold=self._qthreshold)
             self._regions[sig] = region
             self.stats["regions"][sig.describe()] = region.stats
         return region
@@ -951,8 +1121,17 @@ class AggregationExecutor:
             fn = jax.jit(partial(_chunked_eval, region.batched_fn, c))
             try:
                 jax.block_until_ready(fn(*stacked))    # compile + warm
-            except Exception:
+            except (TypeError, ValueError):
                 continue                               # body rejects chunking
+            except Exception as err:
+                # anything else (OOM, lowering bug, device loss) is NOT a
+                # "this body dislikes chunking" signal — surface it with
+                # the region/bucket context instead of silently pinning
+                # chunk=0 (satellite of DESIGN.md §11)
+                raise RegionFaultError(
+                    f"inner-chunk tuning failed for region "
+                    f"{region.signature.describe()} (bucket {b}, chunk "
+                    f"{c}): {err}") from err
             # min-of-3 guards the choice against scheduler hiccups — the
             # memo pins it process-wide, so one noisy sample must not
             # lock in a pessimal chunk (~3.5x between best and worst here)
@@ -1051,7 +1230,15 @@ class AggregationExecutor:
                 ring.compact(first)
                 for p in region.queue:
                     p.slot -= first
-            entry = _Pending(future=fut, slot=ring.write(args))
+            slot = ring.write(args)
+            if self._injector is not None:
+                # ring-corruption site: this task's staged inputs go bad
+                # between submission and launch (bad DMA / stale buffer)
+                bad = self._injector.corrupt_ring(
+                    kernel, region.waves, region._wave_submitted)
+                if bad is not None:
+                    ring.poison(slot, bad)
+            entry = _Pending(future=fut, slot=slot)
             self.stats["staging_s"] += time.perf_counter() - t0
         self._enqueue(region, entry)
         return fut
@@ -1094,6 +1281,11 @@ class AggregationExecutor:
 
     def _enqueue(self, region: _Region, entry: _Pending) -> None:
         self._check_mode(region, entry)
+        # wave-relative task identity (§11): position within the current
+        # submission wave — stable across re-executions, and what payload
+        # fault specs and the quarantine list key on
+        entry.wave_index = region._wave_submitted
+        region._wave_submitted += entry.count
         region.queue.append(entry)
         region.queued_tasks += entry.count
         region._wave_peak = max(region._wave_peak, region.queued_tasks)
@@ -1191,7 +1383,10 @@ class AggregationExecutor:
     def _largest_bucket(region: _Region, k: int) -> int:
         best = region.buckets[0]
         for b in region.buckets:
-            if b <= k:
+            # degraded mode (§11): rungs banned after repeated compile/
+            # launch failures are skipped; bucket 1 is never banned, so a
+            # remainder bucket always survives
+            if b <= k and b not in region.bad_buckets:
                 best = b
         if best > k:
             raise RuntimeError(
@@ -1221,7 +1416,19 @@ class AggregationExecutor:
     def _launch(self, region: _Region, k: int) -> None:
         tasks = self._take(region, k)
         mode = self._entry_mode(tasks[0])
-        t0 = time.perf_counter()
+        self._launch_tasks(region, tasks, k, mode)
+        if mode == "ring" and not region.queue:
+            region.ring.swap()    # in-flight launch keeps the old buffer
+        if not region.queue:
+            self._wave_complete(region)
+
+    def _stage(self, region: _Region, tasks: List[_Pending], k: int,
+               mode: str):
+        """One bucket's inputs -> (fn, call_args, parents, indices): the
+        compiled program plus the §11 re-execution recipe — ``parents`` are
+        the concrete arrays ``region.gather_jit`` can re-run any position
+        subset against (parent set / launched ring buffers / stacked host
+        batch), ``indices`` each position's absolute index into them."""
         if mode == "ref":
             indices: List[int] = []
             for t in tasks:
@@ -1245,8 +1452,11 @@ class AggregationExecutor:
                       or region.gather_jit)
                 call_args = (idx,) + parents
         elif mode == "ring":
+            first = tasks[0].slot
+            parents = region.ring.buffers()   # concrete refs: a later swap
+            indices = list(range(first, first + k))   # cannot invalidate
             fn = region.compiled_for(k, "ring")
-            call_args = (jnp.int32(tasks[0].slot),) + region.ring.buffers()
+            call_args = (jnp.int32(first),) + parents
         else:
             stacked = []
             for j in range(len(tasks[0].args)):
@@ -1257,11 +1467,38 @@ class AggregationExecutor:
                     stacked.append(jnp.stack(parts))
                 else:
                     stacked.append(jnp.asarray(self.buffers.stage(parts)))
+            parents = tuple(stacked)
+            indices = list(range(k))
             fn = region.compiled.get(("host", k), region.host_jit)
-            call_args = tuple(stacked)
+            call_args = parents
+        return fn, call_args, parents, indices
+
+    def _launch_tasks(self, region: _Region, tasks: List[_Pending], k: int,
+                      mode: str, degraded: bool = False) -> None:
+        """Stage + dispatch one bucket of TAKEN tasks and fulfil their
+        futures; under ``guard="finite"`` the launch is also recorded for
+        the post-drain audit.  A compile/launch fault degrades the bucket
+        (``_degrade``) instead of propagating — the wave survives."""
+        t0 = time.perf_counter()
+        fn, call_args, parents, indices = self._stage(region, tasks, k, mode)
         self.stats["staging_s"] += time.perf_counter() - t0
-        exe = self.pool.get()
-        out = exe.launch(fn, *call_args, family=region.signature.kernel)
+        try:
+            out = self._dispatch(region, fn, call_args, k)
+        except (BucketCompileError, LaunchFaultError) as err:
+            self._degrade(region, tasks, k, mode, err)
+            return
+        wave_ids: List[int] = []
+        for t in tasks:
+            wave_ids.extend(range(t.wave_index, t.wave_index + t.count))
+        poisoned: Dict[int, str] = {}
+        if self._injector is not None:
+            # payload site: the matched tasks' outputs go non-finite (the
+            # NaN blow-up / bad tenant input the guard exists to contain)
+            hit = self._injector.poison_positions(
+                region.signature.kernel, region.waves, wave_ids)
+            if hit:
+                out = poison_slots(out, sorted(hit), hit)
+                poisoned = {wave_ids[p]: m for p, m in hit.items()}
         slot = 0
         for t in tasks:
             if isinstance(t.future, RangeFuture):
@@ -1269,21 +1506,215 @@ class AggregationExecutor:
             else:
                 t.future._fulfil(out, slot)
             slot += t.count
-        if mode == "ring" and not region.queue:
-            region.ring.swap()    # in-flight launch keeps the old buffer
+        if self._guard == "finite":
+            # dispatch the finite reduction NOW (non-blocking) so it
+            # overlaps the staging/dispatch of later launches in the
+            # drain; _run_guard only forces the boolean post-drain
+            self._guard_records.append(_LaunchRecord(
+                region=region, out=out, k=k, parents=parents,
+                indices=indices, tasks=list(tasks), wave_ids=wave_ids,
+                wave=region.waves, poisoned=poisoned,
+                verdict=all_finite_async(out)))
         self.stats["launches"] += 1
         hist = self.stats["aggregated_hist"]
         hist[k] = hist.get(k, 0) + 1
         region.stats["launches"] += 1
         rhist = region.stats["aggregated_hist"]
         rhist[k] = rhist.get(k, 0) + 1
-        if not region.queue:
-            self._wave_complete(region)
+        if degraded:
+            region.stats["faults"]["degraded_launches"] += 1
+
+    def _dispatch(self, region: _Region, fn: Callable, call_args, k: int):
+        """One pool launch with the §11 dispatch-site injection and the
+        bounded-retry policy: launch faults are transient by assumption
+        (retried with exponential backoff from ``retry_backoff_s``),
+        compile faults deterministic (never retried — the same program
+        cannot succeed on attempt two)."""
+        kern = region.signature.kernel
+        faults = region.stats["faults"]
+        attempts = 0
+        while True:
+            try:
+                inj = self._injector
+                if inj is not None:
+                    if inj.compile_fails(kern, k):
+                        faults["compile_failures"] += 1
+                        raise BucketCompileError(
+                            f"injected compile failure: kernel {kern!r} "
+                            f"bucket {k}")
+                    lf = inj.launch_fault(kern, k)
+                    if lf is not None:
+                        fmode, delay = lf
+                        if fmode == "delay":
+                            time.sleep(delay)
+                        else:
+                            faults["launch_failures"] += 1
+                            raise LaunchFaultError(
+                                f"injected launch failure: kernel {kern!r} "
+                                f"bucket {k}")
+                return self.pool.get().launch(fn, *call_args, family=kern)
+            except BucketCompileError:
+                raise
+            except LaunchFaultError:
+                if attempts >= self._max_retries:
+                    raise
+                attempts += 1
+                faults["retries"] += 1
+                if self._retry_backoff:
+                    time.sleep(self._retry_backoff * (2 ** (attempts - 1)))
+
+    def _degrade(self, region: _Region, tasks: List[_Pending], k: int,
+                 mode: str, err: Exception) -> None:
+        """Graceful degradation (§11): ban the failing rung and re-drain
+        the taken tasks greedily through the remaining good rungs — down
+        to per-task bucket-1 launches, the degraded floor.  A failure AT
+        bucket 1 has nowhere smaller to fall: those tasks fail, with the
+        dispatch error attached to their futures."""
+        if k == 1:
+            self._fail_tasks(region, tasks, err)
+            return
+        region.bad_buckets.add(k)
+        remaining = list(tasks)
+        n_left = sum(t.count for t in remaining)
+        while n_left:
+            good = [b for b in region.buckets
+                    if b <= n_left and b not in region.bad_buckets]
+            b = max(good) if good else 1
+            head, remaining = _split_taken(remaining, b)
+            self._launch_tasks(region, head, b, mode, degraded=True)
+            n_left -= b
+
+    def _fail_tasks(self, region: _Region, tasks: List[_Pending],
+                    err: Exception) -> None:
+        n = 0
+        for t in tasks:
+            ids = tuple(range(t.wave_index, t.wave_index + t.count))
+            cause = TaskFailedError(
+                f"task(s) {list(ids)} of {region.signature.describe()} "
+                f"failed: {err}", task_ids=ids,
+                kernel=region.signature.kernel)
+            cause.__cause__ = err
+            if isinstance(t.future, RangeFuture):
+                t.future._fail_range(t.fut_offset, t.count, cause)
+            else:
+                t.future._fail(cause)
+            n += t.count
+        region.stats["faults"]["failed_tasks"] += n
+
+    # -- post-drain guard: detection, bisection, containment (§11) ---------
+    def _run_guard(self) -> None:
+        """ONE scalar all-finite check per drained launch (the guarded-
+        but-untripped cost); a tripped launch's futures are retracted and
+        re-resolved by ladder bisection."""
+        records, self._guard_records = self._guard_records, []
+        for rec in records:
+            if bool(rec.verdict):
+                continue
+            self._contain(rec)
+
+    def _contain(self, rec: _LaunchRecord) -> None:
+        """Isolate the offending slot(s) of a tripped launch in O(log
+        bucket) re-executions: quarantined repeat offenders short-circuit
+        to per-task groups, everything else halves recursively; clean
+        groups re-fulfil their futures bit-identically (batch
+        decomposition is exact), non-finite singletons fail."""
+        region = rec.region
+        faults = region.stats["faults"]
+        faults["trips"] += 1
+        for t in rec.tasks:
+            if isinstance(t.future, RangeFuture):
+                t.future._retract(rec.out)
+            else:
+                t.future._retract()
+        # position -> (owning entry, entry's first position)
+        owner: Dict[int, Tuple[_Pending, int]] = {}
+        pos = 0
+        for t in rec.tasks:
+            for p in range(pos, pos + t.count):
+                owner[p] = (t, pos)
+            pos += t.count
+        quarantined = [p for p in range(rec.k)
+                       if rec.wave_ids[p] in region.quarantine]
+        rest = [p for p in range(rec.k)
+                if rec.wave_ids[p] not in region.quarantine]
+        # the root group is KNOWN bad only when no quarantined position
+        # could be carrying the trip — then its own re-execution is skipped
+        groups: List[Tuple[List[int], bool]] = [([p], False)
+                                                for p in quarantined]
+        if rest:
+            groups.append((rest, not quarantined))
+        culprits: List[int] = []
+        while groups:
+            grp, known_bad = groups.pop()
+            if known_bad:
+                if len(grp) == 1:
+                    culprits.append(grp[0])
+                else:
+                    mid = len(grp) // 2
+                    groups.append((grp[:mid], False))
+                    groups.append((grp[mid:], False))
+                continue
+            out = self._reexec(rec, grp)
+            faults["bisection_launches"] += 1
+            if all_finite(out):
+                self._refulfil(rec, owner, grp, out)
+            elif len(grp) == 1:
+                culprits.append(grp[0])
+            else:
+                mid = len(grp) // 2
+                groups.append((grp[:mid], False))
+                groups.append((grp[mid:], False))
+        for p in culprits:
+            tid = rec.wave_ids[p]
+            region.quarantine.record_offense(tid)
+            faults["quarantined"] = region.quarantine.as_stats()
+            err = TaskFailedError(
+                f"non-finite output isolated to task {tid} of "
+                f"{region.signature.describe()} (wave {rec.wave}, launch "
+                f"bucket {rec.k})", task_ids=(tid,),
+                kernel=region.signature.kernel)
+            t, first = owner[p]
+            if isinstance(t.future, RangeFuture):
+                t.future._fail_range(t.fut_offset + (p - first), 1, err)
+            else:
+                t.future._fail(err)
+        faults["failed_tasks"] += len(culprits)
+
+    def _reexec(self, rec: _LaunchRecord, grp: List[int]):
+        """Re-execute one position subset through the region's shape-
+        polymorphic gather program.  Injected payload poison is re-applied
+        by wave id (the poison is a property of the TASK), so a poisoned
+        task stays non-finite at every bucket size and bisection converges
+        on it; survivors come back bit-identical to their unaggregated
+        results — the no-padding equivalence invariant."""
+        region = rec.region
+        idx = jnp.asarray([rec.indices[p] for p in grp], jnp.int32)
+        out = self.pool.get().launch(region.gather_jit, idx, *rec.parents,
+                                     family=region.signature.kernel)
+        pois = {j: rec.poisoned[rec.wave_ids[p]]
+                for j, p in enumerate(grp)
+                if rec.wave_ids[p] in rec.poisoned}
+        if pois:
+            out = poison_slots(out, sorted(pois), pois)
+        return out
+
+    @staticmethod
+    def _refulfil(rec: _LaunchRecord, owner: Dict[int, Tuple[_Pending, int]],
+                  grp: List[int], out: Any) -> None:
+        """Fulfil a clean re-executed group (bisection keeps groups as
+        contiguous position runs, so segment assembly stays slice-shaped)."""
+        for j, p in enumerate(grp):
+            t, first = owner[p]
+            if isinstance(t.future, RangeFuture):
+                t.future._fulfil_range(out, j, t.fut_offset + (p - first), 1)
+            else:
+                t.future._fulfil(out, j)
 
     # -- ladder auto-tuning ------------------------------------------------
     def _wave_complete(self, region: _Region) -> None:
         """A wave ended (queue drained to zero): record its peak queue
         length and, past the warmup, re-derive the region's ladder."""
+        region._wave_submitted = 0    # wave-relative task ids restart
         peak = region._wave_peak
         if peak:
             qh = region.stats["queue_hist"]
@@ -1436,6 +1867,8 @@ class AggregationExecutor:
                                                       region.queued_tasks))
             live = [r for r in live if r.queue]
         self.pool.drain()
+        if self._guard_records:
+            self._run_guard()
         # the routing cache holds strong refs to the last wave's parent
         # arrays; the wave is over, release them (next wave re-primes)
         self._sig_cache.clear()

@@ -168,6 +168,31 @@ class SlotRing:
         self._pending.clear()
         self.commits += 1
 
+    def poison(self, slot: int, mode: str = "nan") -> None:
+        """Corrupt one claimed slot's staged inputs (fault-injection site:
+        a bad DMA or a stale recycled buffer handed to the wrong task).
+        A still-pending write is replaced host-side before it ever reaches
+        the device; an already-committed slot gets one non-donated device
+        update per inexact argument.  Integer arguments are left intact —
+        they cannot carry a NaN/Inf poison."""
+        assert 0 <= slot < self.fill, "poisoning an unclaimed slot"
+        val = float("nan") if mode == "nan" else float("inf")
+
+        def bad(a):
+            arr = jnp.asarray(a)
+            if not jnp.issubdtype(arr.dtype, jnp.inexact):
+                return a
+            return jnp.full_like(arr, val)
+
+        if slot >= self._committed:
+            i = slot - self._committed
+            self._pending[i] = tuple(bad(a) for a in self._pending[i])
+            return
+        active = self._bufs[self._active]
+        for j in range(len(active)):
+            if jnp.issubdtype(active[j].dtype, jnp.inexact):
+                active[j] = active[j].at[slot].set(val)
+
     def compact(self, start: int) -> None:
         """Renumber live slots [start:fill) down to [0, fill-start)."""
         self.commit()

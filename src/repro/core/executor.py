@@ -49,10 +49,19 @@ class DeviceExecutor:
         """Enqueue fn(*args) (async under XLA) and track its outputs.
 
         ``family`` tags the launch with its kernel family (TaskSignature
-        kernel id) so interleaved multi-region dispatch is observable."""
+        kernel id) so interleaved multi-region dispatch is observable.
+
+        A raising ``fn`` must leave the executor consistent: the host time
+        spent before the raise still lands in ``dispatch_s`` (the overhead
+        was paid), while the launch counters and in-flight tracking only
+        record launches that actually enqueued — a failed dispatch must
+        not make ``busy()``/``drain()`` wait on buffers that don't exist.
+        """
         t0 = time.perf_counter()
-        out = fn(*args)
-        self.dispatch_s += time.perf_counter() - t0
+        try:
+            out = fn(*args)
+        finally:
+            self.dispatch_s += time.perf_counter() - t0
         self.launches += 1
         if family is not None:
             self.launches_by_family[family] = \
@@ -69,9 +78,21 @@ class DeviceExecutor:
         return bool(self._inflight)
 
     def drain(self) -> None:
+        """Block until every tracked launch is ready.  XLA surfaces
+        device-side failures at block time, not at enqueue — so a drain
+        must not stop at (or silently swallow) the first bad buffer:
+        every buffer is waited on, tracking is always cleared, and the
+        FIRST deferred error is re-raised."""
+        first: Optional[BaseException] = None
         for x in self._inflight:
-            jax.block_until_ready(x)
+            try:
+                jax.block_until_ready(x)
+            except Exception as e:      # deferred device-side error
+                if first is None:
+                    first = e
         self._inflight.clear()
+        if first is not None:
+            raise first
 
 
 class ExecutorPool:
@@ -98,8 +119,17 @@ class ExecutorPool:
         return any(not e.busy() for e in self.executors)
 
     def drain(self) -> None:
+        """Drain every executor; the first deferred error surfaces after
+        ALL executors have been drained (no half-drained pool)."""
+        first: Optional[BaseException] = None
         for e in self.executors:
-            e.drain()
+            try:
+                e.drain()
+            except Exception as err:
+                if first is None:
+                    first = err
+        if first is not None:
+            raise first
 
     @property
     def total_launches(self) -> int:

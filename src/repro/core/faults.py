@@ -1,0 +1,360 @@
+"""Fault injection + containment primitives for the aggregation runtime.
+
+Aggregation deliberately widens the blast radius of every failure: one
+poisoned task (a NaN blow-up, a bad tenant input, a failed bucket compile)
+corrupts an entire mega-bucket of slots instead of one launch.  Long
+production campaigns of the source system hit exactly this (PAPERS.md: the
+Fugaku stellar-merger runs, and the exascale AMT follow-up, both name
+resilience as first-order), so the runtime needs two things this module
+provides:
+
+* a **deterministic fault-injection harness** — :class:`FaultSpec` /
+  :class:`FaultInjector` — that injects failures at configurable sites
+  (NaN/Inf task payloads, simulated bucket-compile failures, delayed or
+  failed launches, corrupted ring slots), seeded and composable, so tests
+  and benchmarks can replay *exact* failure schedules;
+* the **error taxonomy + numeric helpers** the containment machinery in
+  ``core/aggregation.py`` builds on: per-bucket finite checks
+  (:func:`all_finite`), slot poisoning (:func:`poison_slots`), and the
+  exception types a failed task's future carries.
+
+Injection is a pure observation layer: with no injector attached (the
+default), the hot path executes zero extra device work, and with an
+injector attached but no spec matching, only cheap host-side predicate
+calls run.  Detection (``AggregationConfig(guard="finite")``), bisection
+and quarantine live in ``AggregationExecutor`` (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+class FaultError(RuntimeError):
+    """Base class for every fault the containment layer recognises."""
+
+
+class BucketCompileError(FaultError):
+    """A bucket program failed to compile (simulated or real).  Compilation
+    is deterministic per process, so the executor degrades the ladder —
+    it never retries the same bucket size."""
+
+
+class LaunchFaultError(FaultError):
+    """A launch failed at dispatch (transient by assumption: the executor
+    retries with bounded backoff before degrading to smaller buckets)."""
+
+
+class TaskFailedError(FaultError):
+    """Raised when reading the result of a task the guard marked failed.
+    ``task_ids`` carries the wave-relative indices of the culprits."""
+
+    def __init__(self, msg: str, task_ids: Sequence[int] = (),
+                 kernel: str = ""):
+        super().__init__(msg)
+        self.task_ids = tuple(task_ids)
+        self.kernel = kernel
+
+
+class RegionFaultError(FaultError):
+    """An unexpected error re-raised with region/bucket context attached
+    (the narrow-except policy: expected failures are handled, everything
+    else surfaces loudly *with* the aggregation context)."""
+
+
+class NonFiniteStateError(FaultError):
+    """A guarded strategy without containment machinery (fused / s2)
+    produced a non-finite iterate — detection without bisection."""
+
+
+# ---------------------------------------------------------------------------
+# Fault specifications
+# ---------------------------------------------------------------------------
+
+SITES = ("payload", "compile", "launch", "ring")
+PAYLOAD_MODES = ("nan", "inf")
+LAUNCH_MODES = ("fail", "delay")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic injection rule.  ``None`` fields match anything.
+
+    site="payload"  — the matched task's *output slot* becomes NaN/Inf in
+                      every launch that contains it (re-executions
+                      included, so the poison is a property of the TASK:
+                      bisection finds it at any bucket size).  Matched by
+                      (kernel, task, wave); ``rate`` draws a deterministic
+                      seeded coin per (kernel, wave, task) instead.
+    site="ring"     — the matched task's slot-ring *input* is poisoned at
+                      submission (the corrupted-staging variant; flows
+                      through the kernel into a non-finite output).
+    site="compile"  — compiling/launching the matched (kernel, bucket)
+                      program raises :class:`BucketCompileError`.
+    site="launch"   — dispatch of the matched (kernel, bucket) launch
+                      fails (``mode="fail"``) or is delayed by ``delay_s``
+                      (``mode="delay"``).  ``times`` bounds how often the
+                      spec fires (a ``times=1`` launch failure models a
+                      transient the retry policy must absorb).
+    """
+
+    site: str
+    kernel: Optional[str] = None      # kernel family id (None = any family)
+    task: Optional[int] = None        # wave-relative task index
+    wave: Optional[int] = None        # region wave counter (None = every)
+    bucket: Optional[int] = None      # bucket size (compile/launch sites)
+    mode: Optional[str] = None        # payload: nan|inf; launch: fail|delay
+    times: Optional[int] = None       # max fires (None = unbounded)
+    rate: Optional[float] = None      # payload: seeded per-task coin
+    delay_s: float = 0.0              # launch "delay" mode: seconds
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} — valid "
+                             f"sites: {', '.join(SITES)}")
+        if self.site in ("payload", "ring"):
+            if self.mode is not None and self.mode not in PAYLOAD_MODES:
+                raise ValueError(f"payload/ring mode must be one of "
+                                 f"{PAYLOAD_MODES}, got {self.mode!r}")
+            if self.task is None and self.rate is None:
+                raise ValueError(f"{self.site} spec needs 'task' or 'rate' "
+                                 f"— an unconditional poison would fail "
+                                 f"every task")
+        if self.site == "launch" and self.mode not in LAUNCH_MODES:
+            raise ValueError(f"launch mode must be one of {LAUNCH_MODES}, "
+                             f"got {self.mode!r}")
+        if self.rate is not None and not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.times is not None and self.times < 1:
+            raise ValueError(f"times must be >= 1, got {self.times}")
+
+
+def _coin(seed: int, *key) -> float:
+    """Deterministic draw in [0, 1) from (seed, *key) — stable across
+    processes and call order, so a ``rate`` schedule replays exactly."""
+    h = hashlib.blake2b(repr((seed,) + key).encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big") / 2.0 ** 64
+
+
+class FaultInjector:
+    """Deterministic, composable fault schedule over many :class:`FaultSpec`
+    rules.  Attach to an executor via
+    ``AggregationExecutor.set_fault_injector`` (or pass ``fault_injector=``
+    at construction) and to a ``ServingEngine`` the same way.
+
+    Every fired injection is appended to ``log`` as a
+    ``(site, kernel, wave, detail)`` tuple — the replayable record a test
+    asserts against (and the exact schedule a second injector with the
+    same specs + seed reproduces).
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec], seed: int = 0):
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self.seed = int(seed)
+        self._fired: Dict[int, int] = {}
+        self.log: List[Tuple[str, str, Optional[int], Any]] = []
+
+    # -- matching ----------------------------------------------------------
+    @staticmethod
+    def _field_ok(want, got) -> bool:
+        return want is None or want == got
+
+    def _fire(self, i: int, spec: FaultSpec, kernel: str,
+              wave: Optional[int], detail) -> bool:
+        n = self._fired.get(i, 0)
+        if spec.times is not None and n >= spec.times:
+            return False
+        self._fired[i] = n + 1
+        self.log.append((spec.site, kernel, wave, detail))
+        return True
+
+    # -- sites -------------------------------------------------------------
+    def poison_positions(self, kernel: str, wave: int,
+                         wave_ids: Sequence[int]) -> Dict[int, str]:
+        """Which positions of a launch (0..k-1, identified by their
+        wave-relative task ids) carry a payload fault right now; returns
+        ``{position: mode}``.  Called on every launch AND every bisection
+        re-execution — the poison follows the task."""
+        out: Dict[int, str] = {}
+        for i, spec in enumerate(self.specs):
+            if spec.site != "payload":
+                continue
+            if not (self._field_ok(spec.kernel, kernel)
+                    and self._field_ok(spec.wave, wave)):
+                continue
+            mode = spec.mode or "nan"
+            for pos, tid in enumerate(wave_ids):
+                if pos in out:
+                    continue
+                if spec.task is not None:
+                    if spec.task == tid and self._fire(i, spec, kernel, wave,
+                                                       ("task", tid)):
+                        out[pos] = mode
+                elif spec.rate is not None:
+                    if (_coin(self.seed, "payload", kernel, wave, tid)
+                            < spec.rate
+                            and self._fire(i, spec, kernel, wave,
+                                           ("task", tid))):
+                        out[pos] = mode
+        return out
+
+    def corrupt_ring(self, kernel: str, wave: int,
+                     task_id: int) -> Optional[str]:
+        """Should this task's ring slot be poisoned at submission?"""
+        for i, spec in enumerate(self.specs):
+            if spec.site != "ring":
+                continue
+            if not (self._field_ok(spec.kernel, kernel)
+                    and self._field_ok(spec.wave, wave)):
+                continue
+            hit = (spec.task == task_id if spec.task is not None
+                   else _coin(self.seed, "ring", kernel, wave,
+                              task_id) < (spec.rate or 0.0))
+            if hit and self._fire(i, spec, kernel, wave, ("task", task_id)):
+                return spec.mode or "nan"
+        return None
+
+    def compile_fails(self, kernel: str, bucket: int) -> bool:
+        """Does compiling/entering the (kernel, bucket) program fail?"""
+        for i, spec in enumerate(self.specs):
+            if (spec.site == "compile"
+                    and self._field_ok(spec.kernel, kernel)
+                    and self._field_ok(spec.bucket, bucket)
+                    and self._fire(i, spec, kernel, None,
+                                   ("bucket", bucket))):
+                return True
+        return False
+
+    def launch_fault(self, kernel: str,
+                     bucket: int) -> Optional[Tuple[str, float]]:
+        """Launch-site injection: ``("fail", 0.0)`` to raise, or
+        ``("delay", seconds)`` to stall dispatch; None when clean."""
+        for i, spec in enumerate(self.specs):
+            if (spec.site == "launch"
+                    and self._field_ok(spec.kernel, kernel)
+                    and self._field_ok(spec.bucket, bucket)
+                    and self._fire(i, spec, kernel, None,
+                                   ("bucket", bucket))):
+                return (spec.mode, spec.delay_s)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Numeric helpers (shared by executor guard, runner guard, serving guard)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _all_finite_impl(leaves):
+    acc = jnp.bool_(True)
+    for leaf in leaves:
+        acc = jnp.logical_and(acc, jnp.all(jnp.isfinite(leaf)))
+    return acc
+
+
+def all_finite(tree) -> bool:
+    """ONE scalar per checked pytree: are all inexact leaves finite?
+    This is the per-bucket guard predicate — deliberately not per-slot
+    (per-slot masks cost a device reduction per task; the bisection path
+    recovers slot resolution in O(log bucket) launches only when a bucket
+    actually trips)."""
+    verdict = all_finite_async(tree)
+    return verdict if isinstance(verdict, bool) else bool(verdict)
+
+
+def all_finite_async(tree):
+    """Dispatch the finite-check WITHOUT blocking: returns the device
+    scalar (or plain True when nothing is checkable).  The guard enqueues
+    this right after each launch so the reduction overlaps later staging
+    and dispatch work; the verdict is only forced (``bool``) post-drain."""
+    leaves = [x for x in jax.tree_util.tree_leaves(tree)
+              if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)]
+    if not leaves:
+        return True
+    return _all_finite_impl(leaves)
+
+
+def poison_slots(tree, positions: Sequence[int],
+                 modes: Optional[Dict[int, str]] = None):
+    """Overwrite the given slot positions of a batched output pytree with
+    NaN (or +Inf for positions whose mode is "inf").  Inexact leaves only —
+    integer outputs cannot carry the poison and are left untouched."""
+    if not positions:
+        return tree
+    modes = modes or {}
+    nan_pos = [p for p in positions if modes.get(p, "nan") == "nan"]
+    inf_pos = [p for p in positions if modes.get(p, "nan") == "inf"]
+
+    def one(x):
+        if not (hasattr(x, "dtype")
+                and jnp.issubdtype(x.dtype, jnp.inexact)):
+            return x
+        if nan_pos:
+            x = x.at[jnp.asarray(nan_pos, jnp.int32)].set(jnp.nan)
+        if inf_pos:
+            x = x.at[jnp.asarray(inf_pos, jnp.int32)].set(jnp.inf)
+        return x
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def poison_args(args: Tuple[Any, ...], mode: str = "nan") -> Tuple[Any, ...]:
+    """NaN/Inf-fill one task's input argument tuple (inexact args only) —
+    the ring-corruption site's payload."""
+    val = float("nan") if mode == "nan" else float("inf")
+
+    def one(a):
+        arr = jnp.asarray(a)
+        if not jnp.issubdtype(arr.dtype, jnp.inexact):
+            return a
+        return jnp.full_like(arr, val)
+
+    return tuple(one(a) for a in args)
+
+
+# ---------------------------------------------------------------------------
+# Quarantine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QuarantineList:
+    """Per-region repeat-offender memory: wave-relative task indices whose
+    outputs tripped the guard ``threshold`` times get quarantined.  A
+    quarantined index short-circuits bisection on later trips — it is
+    re-executed per-task directly (the degraded per-task mode), so a known
+    repeat offender costs O(1) extra launches instead of O(log bucket)."""
+
+    threshold: int = 2
+    offenses: Dict[int, int] = field(default_factory=dict)
+    members: set = field(default_factory=set)
+
+    def record_offense(self, task_id: int) -> bool:
+        """Count one guard trip against ``task_id``; returns True when the
+        index just crossed the threshold (newly quarantined)."""
+        n = self.offenses.get(task_id, 0) + 1
+        self.offenses[task_id] = n
+        if n >= self.threshold and task_id not in self.members:
+            self.members.add(task_id)
+            return True
+        return False
+
+    def __contains__(self, task_id: int) -> bool:
+        return task_id in self.members
+
+    def as_stats(self) -> List[int]:
+        return sorted(self.members)
+
+
+__all__ = [
+    "FaultError", "BucketCompileError", "LaunchFaultError",
+    "TaskFailedError", "RegionFaultError", "NonFiniteStateError",
+    "FaultSpec", "FaultInjector", "QuarantineList",
+    "all_finite", "all_finite_async", "poison_slots", "poison_args", "SITES",
+]

@@ -210,6 +210,14 @@ class Scenario:
         """Post-RK3-combine hook; identity unless levels need re-syncing."""
         return state
 
+    def describe_task(self, kernel: str, index: int) -> str:
+        """Human-readable identity of one task within a family's submission
+        wave, used to enrich containment failures (DESIGN.md §11) — e.g.
+        "subgrid (1, 3) of the fine level".  Index is wave-relative (the
+        task's position in the family's wave).  Override per scenario; the
+        default names the kernel and position."""
+        return f"task {index} of family {kernel!r}"
+
     def family(self, kernel: str) -> KernelFamily:
         cache = getattr(self, "_family_by_kernel", None)
         if cache is None:

@@ -26,6 +26,7 @@ from repro.configs.base import (
 )
 from repro.core.aggregation import AggregationExecutor, greedy_decomposition
 from repro.core.executor import ExecutorPool
+from repro.core.faults import FaultInjector, NonFiniteStateError, all_finite
 from repro.core.scenario import (
     AMRSedovScenario, Scenario, UniformSedovScenario,
 )
@@ -44,19 +45,25 @@ class StrategyRunner:
     Per-family launch counts are on ``launches_by_family``.
     """
 
-    def __init__(self, scenario: Scenario, agg: AggregationConfig):
+    def __init__(self, scenario: Scenario, agg: AggregationConfig,
+                 fault_injector: Optional[FaultInjector] = None):
         strategy_cls = get_strategy_class(agg.strategy)   # fail fast
         self.scenario = scenario
         self.agg = agg
         self.strategy = agg.strategy
         self._strategy = strategy_cls()
+        self._guard = getattr(agg, "guard", "off")
+        if self._guard not in ("off", "finite"):
+            raise ValueError(
+                f"guard={self._guard!r} — expected 'off' or 'finite'")
         self.pool = ExecutorPool(max(1, agg.n_executors))
         self._agg_exec: Optional[AggregationExecutor] = None
         self.stats: Dict[str, Any] = {"kernel_launches": 0, "iterations": 0,
                                       "staging_s": 0.0}
         if strategy_cls.uses_executor:
             self._agg_exec = AggregationExecutor(
-                None, agg, pool=self.pool, name=scenario.name)
+                None, agg, pool=self.pool, name=scenario.name,
+                fault_injector=fault_injector)
             for fam in scenario.families():
                 self._agg_exec.register(fam.kernel, fam.batched_body)
             for fam in scenario.stage_families():
@@ -83,6 +90,13 @@ class StrategyRunner:
     def executor(self) -> Optional[AggregationExecutor]:
         """The multi-region aggregation executor (s3/s2+s3), else None."""
         return self._agg_exec
+
+    def set_fault_injector(self, injector: Optional[FaultInjector]) -> None:
+        """Arm (or disarm with None) deterministic fault injection on the
+        aggregation executor.  Executor-less strategies (fused / s2) have
+        no injection sites — for them only the runner-level guard applies."""
+        if self._agg_exec is not None:
+            self._agg_exec.set_fault_injector(injector)
 
     @property
     def launches_by_family(self) -> dict:
@@ -125,7 +139,19 @@ class StrategyRunner:
     # -- one solver iteration ----------------------------------------------
     def rhs(self, state):
         self.stats["iterations"] += 1
-        return self._strategy.run_iteration(self.scenario, state, self.ctx)
+        out = self._strategy.run_iteration(self.scenario, state, self.ctx)
+        if self._guard == "finite" and self._agg_exec is None:
+            # executor-less strategies (fused / s2) have no per-bucket
+            # containment layer — the guard degrades to a whole-iteration
+            # tripwire so guard="finite" still means "never silently
+            # propagate a non-finite state" under every strategy
+            if not all_finite(out):
+                raise NonFiniteStateError(
+                    f"non-finite rhs output under strategy "
+                    f"{self.strategy!r} (iteration "
+                    f"{self.stats['iterations']}); executor-less strategies "
+                    f"cannot bisect — rerun under s3 to isolate the task")
+        return out
 
     # -- RK3 (three iterations per time-step, as in the paper) -------------
     def rk3_step(self, state, dt):

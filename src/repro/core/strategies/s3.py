@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import gather_futures
+from repro.core.faults import TaskFailedError
 from repro.core.strategies.base import RunContext, Strategy, register_strategy
 
 
@@ -82,7 +83,20 @@ class S3Strategy(Strategy):
         outs = []
         for pop, f in zip(pops, futs):
             if f:
-                outs.append(gather_futures(f))
+                try:
+                    outs.append(gather_futures(f))
+                except TaskFailedError as err:
+                    # translate the executor's wave-relative task ids into
+                    # the scenario's own vocabulary before propagating —
+                    # the physicist debugging a tripped wave should read
+                    # "subgrid (i, j)", not a slot number (DESIGN.md §11)
+                    what = ", ".join(
+                        scenario.describe_task(pop.kernel, tid)
+                        for tid in err.task_ids) or "unknown task"
+                    raise TaskFailedError(
+                        f"{what} failed during aggregated execution: {err}",
+                        task_ids=err.task_ids,
+                        kernel=pop.kernel) from err
             else:
                 spec = jax.eval_shape(
                     scenario.family(pop.kernel).batched_body, *pop.parents)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AggregationConfig
+from repro.core.faults import FaultInjector, poison_slots
 from repro.data.pipeline import length_bucket
 from repro.models import model as model_mod
 
@@ -40,17 +41,25 @@ class Request:
     max_new_tokens: int = 16
     output: List[int] = field(default_factory=list)
     done: bool = False
+    failed: bool = False              # evicted by the guard (DESIGN.md §11)
+    error: Optional[str] = None       # why, when failed
 
 
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 256,
-                 agg: Optional[AggregationConfig] = None):
+                 agg: Optional[AggregationConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.agg = agg or AggregationConfig(max_aggregated=max_batch)
+        self.guard = getattr(self.agg, "guard", "off")
+        if self.guard not in ("off", "finite"):
+            raise ValueError(
+                f"guard={self.guard!r} — expected 'off' or 'finite'")
+        self._injector = fault_injector
         self.buckets = tuple(b for b in self.agg.bucket_sizes()
                              if b <= max_batch) or (max_batch,)
 
@@ -76,7 +85,9 @@ class ServingEngine:
         self.pending: List[Request] = []
         self.next_token = np.zeros((max_batch,), np.int32)
         self._decode = {}                        # bucket -> jitted fn
-        self.stats = {"launches": 0, "tokens": 0, "aggregated_hist": {}}
+        self._step_no = 0                        # launch counter ("wave" id)
+        self.stats = {"launches": 0, "tokens": 0, "aggregated_hist": {},
+                      "faults": {"trips": 0, "evicted": 0}}
 
     def _stub_batch(self, b: Optional[int] = None):
         cfg = self.cfg
@@ -91,6 +102,32 @@ class ServingEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue one request, rejecting malformed input AT SUBMIT time —
+        a bad request found during an aggregated decode step costs the
+        whole co-batch a guard trip; found here it costs one ValueError."""
+        prompt = req.prompt
+        if not isinstance(prompt, (list, tuple)) or not prompt:
+            raise ValueError(
+                f"request {req.rid}: prompt must be a non-empty list of "
+                f"token ids, got {type(prompt).__name__}")
+        vocab = int(getattr(self.cfg, "vocab_size", 0))
+        for t in prompt:
+            if isinstance(t, bool) or not isinstance(t, (int, np.integer)):
+                raise ValueError(
+                    f"request {req.rid}: prompt token {t!r} is not an int")
+            if t < 0 or (vocab and t >= vocab):
+                raise ValueError(
+                    f"request {req.rid}: prompt token {int(t)} outside "
+                    f"[0, {vocab})")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if len(prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the "
+                f"engine's max_len {self.max_len}")
         self.pending.append(req)
 
     def _admit(self) -> None:
@@ -103,6 +140,10 @@ class ServingEngine:
             self._zero_slot_states(slot)
             for tok in req.prompt[:-1]:
                 self._prefill_token(slot, tok)
+                if req.failed:        # guard evicted it mid-prefill
+                    break
+            if req.failed:
+                continue              # slot already recycled by the guard
             self.next_token[slot] = req.prompt[-1]
 
     def _zero_slot_states(self, slot: int) -> None:
@@ -175,11 +216,51 @@ class ServingEngine:
         logits, new_cache = self._decode_fn(bucket)(
             self.cache, jnp.asarray(slots_in), jnp.asarray(toks_in))
         logits = logits[:n]
+        self._step_no += 1
+        if self._injector is not None:
+            # payload site at the serving layer: one tenant's logits row
+            # goes non-finite (a poisoned request), keyed by request id
+            rids = [self.active[s].rid for s in slots.tolist()]
+            hit = self._injector.poison_positions("decode", self._step_no,
+                                                  rids)
+            if hit:
+                logits = poison_slots(logits, sorted(hit), hit)
+        if self.guard == "finite":
+            logits = self._guard_rows(slots, logits)
         self.stats["launches"] += 1
         h = self.stats["aggregated_hist"]
         h[bucket] = h.get(bucket, 0) + 1
         self.cache = new_cache
         return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def _guard_rows(self, slots: np.ndarray, logits) -> jnp.ndarray:
+        """ONE scalar finite-check per aggregated launch; only a trip pays
+        for the per-row verdict.  A non-finite row belongs to exactly one
+        request (slot-array decode is batch-exact): that request is marked
+        failed and EVICTED, its slot recycled, while the co-batched
+        tenants' rows — untouched by the offender — decode on normally.
+        The evicted slot's cache garbage is harmless: admission re-zeroes
+        a slot's state before reuse."""
+        n = int(logits.shape[0])
+        if bool(jnp.all(jnp.isfinite(logits))):
+            return logits
+        self.stats["faults"]["trips"] += 1
+        row_ok = np.asarray(jnp.all(jnp.isfinite(logits.reshape(n, -1)),
+                                    axis=1))
+        for i, slot in enumerate(slots.tolist()):
+            if row_ok[i]:
+                continue
+            req = self.active[slot]
+            req.failed = True
+            req.done = True
+            req.error = (f"request {req.rid}: non-finite logits at decode "
+                         f"step {self._step_no} (slot {slot}) — evicted")
+            del self.active[slot]
+            self.slots_free.append(slot)
+            self.stats["faults"]["evicted"] += 1
+        # keep argmax well-defined on the dead rows (their token is never
+        # delivered — the owning request is already gone)
+        return jnp.nan_to_num(logits, nan=0.0, posinf=0.0, neginf=0.0)
 
     # -- engine loop ---------------------------------------------------------
     def step(self) -> int:
@@ -192,7 +273,9 @@ class ServingEngine:
         out = self._launch(slots, toks)
         finished = []
         for i, slot in enumerate(slots):
-            req = self.active[slot]
+            req = self.active.get(slot)
+            if req is None:           # evicted by the guard mid-launch
+                continue
             tok = int(out[i])
             req.output.append(tok)
             self.next_token[slot] = tok

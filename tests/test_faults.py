@@ -1,0 +1,442 @@
+"""Blast-radius containment (DESIGN.md §11): fault injection, the
+``guard="finite"`` post-drain audit, ladder bisection, quarantine, and the
+degraded execution modes — plus the executor/engine robustness satellites.
+
+The load-bearing property throughout: because the greedy batch
+decomposition is EXACT (bucket 1 pads nothing), every surviving task's
+re-executed result is bit-identical to its fault-free aggregated result,
+so containment never trades correctness for availability.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AggregationConfig
+from repro.core import (
+    AggregationExecutor, DeviceExecutor, ExecutorPool, FaultInjector,
+    FaultSpec, QuarantineList, TaskFailedError, all_finite, gather_futures,
+)
+from repro.core.faults import BucketCompileError, LaunchFaultError
+
+
+def _body(x):
+    return x * 2.0 + 1.0
+
+
+def _make(n, *, guard="finite", specs=(), seed=0, **cfg_kw):
+    cfg = AggregationConfig(max_aggregated=n, guard=guard, **cfg_kw)
+    inj = FaultInjector(list(specs), seed=seed) if specs else None
+    exe = AggregationExecutor(None, cfg, fault_injector=inj)
+    exe.register("k", _body)
+    return exe
+
+
+def _wave(exe, n):
+    parents = (jnp.arange(n, dtype=jnp.float32).reshape(n, 1) * 0.5,)
+    fut = exe.submit_range(parents, 0, n, kernel="k")
+    exe.flush()
+    return parents, fut
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="meteor")
+    with pytest.raises(ValueError):
+        FaultSpec(site="payload")                    # needs task or rate
+    with pytest.raises(ValueError):
+        FaultSpec(site="launch", mode="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(site="payload", task=0, rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(site="payload", task=0, times=0)
+    FaultSpec(site="payload", task=3, mode="inf")    # valid
+
+
+def test_injector_deterministic_replay():
+    """Same specs + seed -> the same exact fault schedule, replayable from
+    the log; a different seed reshuffles rate-based draws."""
+    specs = [FaultSpec(site="payload", rate=0.5, mode="nan")]
+
+    def schedule(seed):
+        inj = FaultInjector(specs, seed=seed)
+        for wave in range(4):
+            inj.poison_positions("k", wave, list(range(8)))
+        return list(inj.log)
+
+    a, b = schedule(7), schedule(7)
+    assert a == b and a                 # deterministic, and rate=0.5 fired
+    assert schedule(8) != a             # seed changes the coin flips
+
+
+def test_injector_times_cap():
+    inj = FaultInjector([FaultSpec(site="payload", task=2, mode="nan",
+                                   times=1)])
+    assert inj.poison_positions("k", 0, [0, 1, 2, 3]) == {2: "nan"}
+    assert inj.poison_positions("k", 1, [0, 1, 2, 3]) == {}   # spent
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: one NaN task in a 64-wide wave
+# ---------------------------------------------------------------------------
+
+def test_single_nan_isolated_in_64_wave():
+    exe = _make(64, specs=[FaultSpec(site="payload", kernel="k", task=17,
+                                     mode="nan", times=1)])
+    parents, fut = _wave(exe, 64)
+    ref = _body(parents[0])
+    assert fut.failed() and fut.failed_indices() == [17]
+    for i in range(64):
+        if i == 17:
+            with pytest.raises(TaskFailedError) as exc:
+                fut.task_result(i)
+            assert exc.value.task_ids == (17,)
+        else:
+            np.testing.assert_array_equal(np.asarray(fut.task_result(i)),
+                                          np.asarray(ref[i]))
+    faults = exe.stats["regions"]["k[1]"]["faults"]
+    assert faults["trips"] == 1
+    assert faults["failed_tasks"] == 1
+    # O(log bucket): the tripped root is split without re-running (its
+    # output already tripped), each level re-executes both halves
+    assert faults["bisection_launches"] == 2 * 6
+    # bisection re-executions never pollute the aggregation histogram
+    assert exe.stats["launches"] == 1
+    assert exe.stats["aggregated_hist"] == {64: 1}
+
+
+def test_range_result_raises_with_culprit_ids():
+    exe = _make(16, specs=[FaultSpec(site="payload", kernel="k", task=5,
+                                     mode="nan", times=1)])
+    _, fut = _wave(exe, 16)
+    with pytest.raises(TaskFailedError) as exc:
+        fut.result()
+    assert 5 in exc.value.task_ids
+    with pytest.raises(TaskFailedError):
+        gather_futures([fut])
+
+
+def test_two_culprits_both_isolated():
+    exe = _make(32, specs=[
+        FaultSpec(site="payload", kernel="k", task=3, mode="nan", times=1),
+        FaultSpec(site="payload", kernel="k", task=28, mode="inf", times=1),
+    ])
+    parents, fut = _wave(exe, 32)
+    ref = _body(parents[0])
+    assert sorted(fut.failed_indices()) == [3, 28]
+    for i in range(32):
+        if i in (3, 28):
+            continue
+        np.testing.assert_array_equal(np.asarray(fut.task_result(i)),
+                                      np.asarray(ref[i]))
+    assert exe.stats["regions"]["k[1]"]["faults"]["failed_tasks"] == 2
+
+
+def test_per_task_ring_corruption_contained():
+    """Ring-slot corruption (staged input, not output) still resolves to
+    the owning task; survivors submitted per-task stay bit-identical."""
+    exe = _make(8, specs=[FaultSpec(site="ring", kernel="k", task=3,
+                                    mode="nan")], launch_watermark=8)
+    futs = [exe.submit(jnp.full((4,), float(i), jnp.float32), kernel="k")
+            for i in range(8)]
+    exe.flush()
+    for i, f in enumerate(futs):
+        if i == 3:
+            assert f.failed()
+            with pytest.raises(TaskFailedError):
+                f.result()
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(f.result()),
+                np.asarray(_body(jnp.full((4,), float(i)))))
+    assert exe.stats["regions"]["k[4]"]["faults"]["trips"] == 1
+
+
+def test_guard_untripped_is_bit_identical():
+    """guard="finite" with no faults: same results, zero containment
+    activity — the audit is observation-only until it trips."""
+    outs = {}
+    for guard in ("off", "finite"):
+        exe = _make(32, guard=guard)
+        parents, fut = _wave(exe, 32)
+        outs[guard] = np.asarray(fut.result())
+    np.testing.assert_array_equal(outs["off"], outs["finite"])
+
+
+def test_invalid_guard_rejected():
+    with pytest.raises(ValueError):
+        _make(8, guard="paranoid")
+
+
+# ---------------------------------------------------------------------------
+# degraded modes: compile / launch faults
+# ---------------------------------------------------------------------------
+
+def test_compile_fault_degrades_to_smaller_buckets():
+    exe = _make(16, guard="off",
+                specs=[FaultSpec(site="compile", kernel="k", bucket=16)])
+    parents, fut = _wave(exe, 16)
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(_body(parents[0])))
+    faults = exe.stats["regions"]["k[1]"]["faults"]
+    assert faults["compile_failures"] == 1
+    assert faults["degraded_launches"] >= 2       # e.g. 8 + 8
+    # the rung stays banned: the next wave never re-attempts bucket 16
+    parents2, fut2 = _wave(exe, 16)
+    np.testing.assert_array_equal(np.asarray(fut2.result()),
+                                  np.asarray(_body(parents2[0])))
+    assert faults["compile_failures"] == 1
+
+
+def test_transient_launch_fault_retried():
+    exe = _make(8, guard="off",
+                specs=[FaultSpec(site="launch", kernel="k", bucket=8,
+                                 mode="fail", times=1)])
+    parents, fut = _wave(exe, 8)
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(_body(parents[0])))
+    faults = exe.stats["regions"]["k[1]"]["faults"]
+    assert faults["retries"] == 1 and faults["launch_failures"] == 1
+    assert faults["degraded_launches"] == 0       # retry succeeded in place
+
+
+def test_persistent_launch_fault_fails_futures():
+    """Every rung (bucket 1 included) failing leaves nowhere to degrade:
+    the futures fail with the dispatch error attached, instead of hanging
+    or poisoning the caller with garbage."""
+    exe = _make(4, guard="off", max_bucket_retries=1,
+                specs=[FaultSpec(site="launch", kernel="k", mode="fail")])
+    _, fut = _wave(exe, 4)
+    assert fut.failed() and sorted(fut.failed_indices()) == [0, 1, 2, 3]
+    with pytest.raises(TaskFailedError):
+        fut.result()
+    # the per-task error chains back to the injected dispatch fault
+    assert isinstance(fut.error(0).__cause__, LaunchFaultError)
+    faults = exe.stats["regions"]["k[1]"]["faults"]
+    assert faults["failed_tasks"] == 4
+
+
+def test_quarantine_repeat_offender():
+    """The same wave-relative task tripping repeatedly lands on the
+    quarantine list; later waves short-circuit it to a singleton probe
+    instead of re-bisecting the whole bucket."""
+    exe = _make(16, quarantine_threshold=2,
+                specs=[FaultSpec(site="payload", kernel="k", task=9,
+                                 mode="nan")])
+    _wave(exe, 16)
+    _wave(exe, 16)
+    faults = exe.stats["regions"]["k[1]"]["faults"]
+    assert 9 in faults["quarantined"]
+    before = faults["bisection_launches"]
+    _, fut = _wave(exe, 16)
+    assert fut.failed_indices() == [9]
+    # quarantined singleton + one clean re-exec of the other 15: far below
+    # a fresh 2*log2(16) bisection
+    assert faults["bisection_launches"] - before <= 2
+
+
+# ---------------------------------------------------------------------------
+# the recovery property: random schedules, two interleaved families
+# ---------------------------------------------------------------------------
+
+def _two_family_executor(specs, seed, n1, n2, cap):
+    cfg = AggregationConfig(max_aggregated=cap, guard="finite")
+    inj = FaultInjector(list(specs), seed=seed)
+    exe = AggregationExecutor(None, cfg, fault_injector=inj)
+    exe.register("a", lambda x: x * 3.0 - 2.0)
+    exe.register("b", lambda x: jnp.sqrt(jnp.abs(x)) + x)
+    pa = (jnp.arange(n1 * 2, dtype=jnp.float32).reshape(n1, 2) * 0.25,)
+    pb = (jnp.arange(n2 * 3, dtype=jnp.float32).reshape(n2, 3) * 0.125,)
+    fa = exe.submit_range(pa, 0, n1, kernel="a")
+    fb = exe.submit_range(pb, 0, n2, kernel="b")
+    exe.flush()
+    return (pa, fa), (pb, fb)
+
+
+@given(n1=st.integers(4, 24), n2=st.integers(4, 24),
+       c1=st.integers(0, 23), c2=st.integers(0, 23),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_recovery_property(n1, n2, c1, c2, seed):
+    """For ANY injected schedule across two interleaved families: exactly
+    the injected tasks fail, and every survivor is bit-identical to the
+    fault-free fused reference of its family."""
+    c1, c2 = c1 % n1, c2 % n2
+    specs = [
+        FaultSpec(site="payload", kernel="a", task=c1, mode="nan", times=1),
+        FaultSpec(site="payload", kernel="b", task=c2, mode="inf", times=1),
+    ]
+    (pa, fa), (pb, fb) = _two_family_executor(specs, seed, n1, n2, cap=16)
+    ref_a = np.asarray(pa[0] * 3.0 - 2.0)
+    ref_b = np.asarray(jnp.sqrt(jnp.abs(pb[0])) + pb[0])
+    assert fa.failed_indices() == [c1]
+    assert fb.failed_indices() == [c2]
+    for i in range(n1):
+        if i != c1:
+            np.testing.assert_array_equal(np.asarray(fa.task_result(i)),
+                                          ref_a[i])
+    for i in range(n2):
+        if i != c2:
+            np.testing.assert_array_equal(np.asarray(fb.task_result(i)),
+                                          ref_b[i])
+
+
+# ---------------------------------------------------------------------------
+# DeviceExecutor robustness satellites
+# ---------------------------------------------------------------------------
+
+def test_launch_raise_keeps_executor_consistent():
+    exe = DeviceExecutor(0)
+
+    def boom(x):
+        raise RuntimeError("lowering exploded")
+
+    with pytest.raises(RuntimeError):
+        exe.launch(boom, jnp.ones(3), family="f")
+    # the failed dispatch paid host time but never enqueued anything
+    assert exe.dispatch_s > 0.0
+    assert exe.launches == 0
+    assert exe.launches_by_family == {}
+    assert not exe.busy()
+    exe.drain()                                     # nothing to wait on
+    out = exe.launch(jnp.sin, jnp.ones(3), family="f")
+    assert exe.launches == 1 and exe.launches_by_family == {"f": 1}
+    jax.block_until_ready(out)
+
+
+def test_drain_surfaces_first_error_and_clears():
+    class _Deferred:
+        def __init__(self, msg=None):
+            self.msg = msg
+
+        def block_until_ready(self):
+            if self.msg:
+                raise RuntimeError(self.msg)
+            return self
+
+        def __jax_array__(self):            # keep jax.block_until_ready away
+            raise TypeError
+
+    exe = DeviceExecutor(0)
+    exe._inflight = [_Deferred("first"), _Deferred("second"), _Deferred()]
+    with pytest.raises(RuntimeError, match="first"):
+        exe.drain()
+    assert exe._inflight == []              # tracking cleared despite errors
+
+    pool = ExecutorPool(2)
+    pool.executors[0]._inflight = [_Deferred("left")]
+    pool.executors[1]._inflight = [_Deferred("right")]
+    with pytest.raises(RuntimeError, match="left"):
+        pool.drain()
+    assert all(e._inflight == [] for e in pool.executors)
+
+
+# ---------------------------------------------------------------------------
+# runner-level guard (executor-less strategies)
+# ---------------------------------------------------------------------------
+
+def test_runner_guard_fused_trips_on_nonfinite():
+    from repro.configs.base import HydroConfig
+    from repro.core import NonFiniteStateError, StrategyRunner, \
+        UniformSedovScenario
+    from repro.hydro.state import sedov_init
+
+    cfg = HydroConfig(subgrid=8, ghost=3, levels=1)
+    u = sedov_init(cfg).u
+    runner = StrategyRunner(UniformSedovScenario(cfg), AggregationConfig(
+        strategy="fused", guard="finite", max_aggregated=1))
+    jax.block_until_ready(runner.rhs(u))            # clean state passes
+    bad = u.at[(0,) * u.ndim].set(float("nan"))
+    with pytest.raises(NonFiniteStateError):
+        runner.rhs(bad)
+    # unguarded runner propagates silently (the pre-§11 behaviour)
+    off = StrategyRunner(UniformSedovScenario(cfg), AggregationConfig(
+        strategy="fused", guard="off", max_aggregated=1))
+    jax.block_until_ready(off.rhs(bad))
+
+
+# ---------------------------------------------------------------------------
+# serving engine: submit validation + poisoned-tenant eviction
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def _engine_model():
+    from repro.configs import get_config, reduced
+    from repro.models import model as model_mod
+    cfg = reduced(get_config("granite-8b"))
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_submit_validation(_engine_model):
+    from repro.serving import Request, ServingEngine
+    cfg, params = _engine_model
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=32)
+    for bad in [
+        Request(0, []),                              # empty prompt
+        Request(1, "abc"),                           # not a token list
+        Request(2, [1, 2.5]),                        # non-int token
+        Request(3, [-1]),                            # negative id
+        Request(4, [10 ** 9]),                       # out of vocab
+        Request(5, [1], max_new_tokens=0),           # nothing to decode
+        Request(6, [1] * 30, max_new_tokens=8),      # exceeds max_len
+    ]:
+        with pytest.raises(ValueError):
+            eng.submit(bad)
+    assert eng.pending == []
+    eng.submit(Request(7, [3, 5], max_new_tokens=4))
+    assert len(eng.pending) == 1
+
+
+def test_engine_evicts_poisoned_request(_engine_model):
+    """A poisoned tenant is evicted and its slot recycled, while the
+    co-batched tenant's tokens are IDENTICAL to a fault-free run — the
+    blast radius of one bad request is exactly that request."""
+    from repro.serving import Request, ServingEngine
+    cfg, params = _engine_model
+
+    def run(injector, guard):
+        agg = AggregationConfig(max_aggregated=4, guard=guard)
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=32, agg=agg,
+                            fault_injector=injector)
+        reqs = [Request(0, [3, 5, 7], max_new_tokens=4),
+                Request(1, [2, 4, 6], max_new_tokens=4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng, reqs
+
+    _, clean = run(None, "off")
+    inj = FaultInjector([FaultSpec(site="payload", kernel="decode", task=1,
+                                   mode="nan", times=1)], seed=5)
+    eng, reqs = run(inj, "finite")
+    assert reqs[1].failed and reqs[1].done and "non-finite" in reqs[1].error
+    assert not reqs[0].failed
+    assert reqs[0].output == clean[0].output        # co-tenant undisturbed
+    assert eng.stats["faults"] == {"trips": 1, "evicted": 1}
+    assert sorted(eng.slots_free) == list(range(4))  # slot recycled
+    # the recycled slot serves a fresh request correctly
+    again = Request(2, [3, 5, 7], max_new_tokens=4)
+    eng.submit(again)
+    eng.run()
+    assert again.output == clean[0].output
+
+
+# ---------------------------------------------------------------------------
+# misc API
+# ---------------------------------------------------------------------------
+
+def test_all_finite_and_quarantine_list():
+    assert all_finite({"a": jnp.ones(3), "i": jnp.arange(3)})
+    assert not all_finite(jnp.array([1.0, float("nan")]))
+    assert not all_finite((jnp.ones(2), jnp.array([float("inf")])))
+    q = QuarantineList(threshold=2)
+    assert not q.record_offense(7)          # first strike
+    assert q.record_offense(7)              # quarantined now
+    assert 7 in q and 8 not in q
+    assert q.as_stats() == [7]
