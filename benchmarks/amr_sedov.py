@@ -22,7 +22,9 @@ import os
 from typing import List
 
 import jax
-from bench_util import WM, hist_deltas, region_hists, time_per_step
+from bench_util import WM, hist_deltas, region_cost_models, \
+    region_cost_paths, region_hists, region_ladders, region_selection, \
+    time_per_step
 
 from repro.configs.amr_sedov import CONFIG, CONFIG_MIXED
 from repro.configs.base import AggregationConfig
@@ -37,41 +39,69 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 def run(cfg, steps: int, repeats: int) -> List[dict]:
     st = amr_sedov_init(cfg)
     dt = amr_courant_dt(st.uc, st.uf, cfg)
+    scn = AMRSedovScenario(cfg)   # shared: one set of traced family bodies
     rows = []
     # the *_epi rows drive the per-level epilogue-fused stage twins
     # (DESIGN.md §10): gather -> level body (traced h) -> Shu-Osher axpy
     # as ONE program per bucket, bit-identical to the fused stage
     # reference (pinned in tests/test_amr.py)
+    # s3_cost_auto is the full-kit aggregated row (auto-tuned ladder,
+    # chunked epilogue-fused mega-buckets, measured bucket costs) — the
+    # DESIGN.md §10 configuration the plain s3/s2s3 rows deliberately
+    # leave off.  mixed_auto is the DESIGN.md §12 row: the executor
+    # measures each family's s2 / s3 / fused wall time during warmup and
+    # routes every family to its measured minimum (coarse and fine levels
+    # may route differently); the resolved assignment and the measured
+    # costs that justified it ride in the row.
     for tag, strat, n_exec, max_agg, knobs in [
         ("s2", "s2", 4, 1, {}),
         ("s3", "s3", 1, 16, {}),
         ("s2s3", "s2+s3", 4, 16, {}),
         ("s3_epi", "s3", 1, 16, dict(fuse_epilogue=True)),
         ("s2s3_epi", "s2+s3", 4, 16, dict(fuse_epilogue=True)),
+        ("s3_cost_auto", "s3", 1, 64,
+         dict(autotune=True, inner_chunk="auto", cost_model=True)),
+        ("mixed_auto", "mixed", 4, 64,
+         dict(autotune=True, inner_chunk="auto", cost_model=True)),
         ("fused_per_level", "fused", 1, 1, {}),
     ]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg, launch_watermark=WM,
                                 **knobs)
-        r = StrategyRunner(AMRSedovScenario(cfg), agg)
+        r = StrategyRunner(scn, agg)
         r.warmup()                           # AOT gather/prefix buckets
         state = (st.uc, st.uf)
         r.rk3_step(state, dt)                # compile remaining programs
         r.stats["kernel_launches"] = 0
+        warm_fams = dict(r.launches_by_family)
         warm_hists = region_hists(r)
         sec, samples = time_per_step(r.rk3_step, state, dt, steps, repeats)
         launches = r.stats["kernel_launches"] / (steps * repeats)
+        by_family = {k: (v - warm_fams.get(k, 0)) / (steps * repeats)
+                     for k, v in r.launches_by_family.items()}
         regions = hist_deltas(region_hists(r), warm_hists)
+        mixed = strat == "mixed"
         rows.append({
             "config": tag,
+            "strategy": strat,
             "ms_per_step": round(sec * 1e3, 3),
             "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
+            "launches_by_family_per_step": by_family or None,
             "fuse_epilogue": bool(knobs.get("fuse_epilogue", False)),
             "flush_policy": agg.flush_policy,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,
         })
+        if knobs.get("cost_model"):
+            rows[-1]["ladder"] = region_ladders(r)
+            rows[-1]["cost_model"] = region_cost_models(r) or None
+        if mixed:
+            rows[-1]["family_strategies"] = (
+                dict(agg.family_strategies) if agg.family_strategies
+                else {"*": "auto"})
+            rows[-1]["selection"] = region_selection(r) or None
+            rows[-1]["cost_model_paths"] = region_cost_paths(r) or None
         print(f"  {tag:16s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
               f"launches/step {launches:.0f}  families {regions or '-'}")
     return rows

@@ -56,34 +56,68 @@ def paired_overhead_pct(base_fn: Callable, test_fn: Callable, state, dt,
             [round(r, 4) for r in ratios])
 
 
+def _regions(runner) -> dict:
+    """The strategy-independent per-family stats surface.  With an
+    aggregation executor this is a live view of its region registry; s2 /
+    fused / mixed populate the same key on the runner's own stats, so s2
+    rows stop reporting null histograms (DESIGN.md §12 stats parity)."""
+    return runner.stats.get("regions", {})
+
+
 def region_ladders(runner) -> dict:
-    """Per-family bucket ladders of a runner's aggregation executor (the
-    auto-tuner's output surface; empty without an executor)."""
-    if runner.executor is None:
-        return {}
+    """Per-family bucket ladders (the auto-tuner's output surface; a
+    family routed away from the executor reports an empty ladder)."""
     return {k: list(v.get("ladder", []))
-            for k, v in runner.executor.stats["regions"].items()}
+            for k, v in _regions(runner).items()}
 
 
 def region_hists(runner) -> dict:
-    """Per-family bucket histograms of a runner's aggregation executor
-    (empty when the strategy runs without one)."""
-    if runner.executor is None:
-        return {}
-    return {k: dict(v["aggregated_hist"])
-            for k, v in runner.executor.stats["regions"].items()}
+    """Per-family launched-batch histograms.  For aggregated families
+    these are bucket sizes; for s2-routed families, coalesce widths."""
+    return {k: dict(v.get("aggregated_hist", {}))
+            for k, v in _regions(runner).items()}
 
 
 def region_cost_models(runner) -> dict:
-    """Per-family measured bucket-cost tables (bucket -> median ms) of a
-    runner's aggregation executor — the DESIGN.md §10 observability
-    surface.  Empty without an executor or before any measurement ran
-    (``cost_model=False`` rows)."""
-    if runner.executor is None:
-        return {}
+    """Per-family measured s3 bucket-cost tables (bucket -> median ms) —
+    the DESIGN.md §10 observability surface.  Empty before any
+    measurement ran (``cost_model=False`` rows)."""
     return {k: {str(b): ms for b, ms in v["cost_model"].items()}
-            for k, v in runner.executor.stats["regions"].items()
+            for k, v in _regions(runner).items()
             if v.get("cost_model")}
+
+
+def region_cost_paths(runner) -> dict:
+    """Per-family per-execution-path cost tables
+    (family -> path -> batch/width -> median ms): the DESIGN.md §12
+    surface that justifies s2-vs-s3-vs-fused selection."""
+    return {k: {p: {str(b): ms for b, ms in tbl.items()}
+                for p, tbl in v["cost_model_paths"].items()}
+            for k, v in _regions(runner).items()
+            if v.get("cost_model_paths")}
+
+
+def region_selection(runner) -> dict:
+    """Per-family routing decision: which strategy ran the family and the
+    measured per-path costs (ms for the family's wave) that justified it.
+    ``strategy_costs`` is null for explicit (non-measured) assignments."""
+    out = {}
+    for k, v in _regions(runner).items():
+        if v.get("selected_strategy") is None:
+            continue
+        out[k] = {"selected_strategy": v["selected_strategy"],
+                  "strategy_costs": v.get("strategy_costs"),
+                  "s2_width": v.get("s2_width")}
+    return out
+
+
+def flush_decision_trace(runner) -> dict:
+    """Per-family flush-policy decision counters (policy consulted /
+    full-wave drains / early drains / holds) — the ``flush_policy="cost"``
+    observability surface.  Empty under the eager policy."""
+    return {k: dict(v["flush_decisions"])
+            for k, v in _regions(runner).items()
+            if v.get("flush_decisions")}
 
 
 def hist_deltas(now: dict, warm: dict) -> dict:

@@ -6,6 +6,15 @@ and every row must carry a config tag plus the launch/timing counters the
 analysis notebooks key on.  A benchmark that silently changes its payload
 shape fails the build here instead of producing unreadable artifacts.
 
+This is also the PERF GATE for the aggregation claim (DESIGN.md §12):
+in every artifact, the row with the minimum ``ms_per_step`` must be an
+aggregated or mixed strategy (``s3`` / ``s2+s3`` / ``mixed``) — if a
+per-task launch strategy (s2) or the fused upper bound ever becomes the
+fastest row, the build fails, because then the aggregation runtime is no
+longer earning its complexity on that scenario.  ``mixed`` rows must
+additionally carry the per-family assignment (``family_strategies``) and
+the measured selection that justified it (``selection``).
+
   PYTHONPATH=src python benchmarks/check_bench_schema.py [paths...]
 
 With no arguments, checks all BENCH_*.json at the repo root (and fails if
@@ -29,11 +38,20 @@ ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
 # present; *_ladder* rows require ladder+hists, *cost* rows additionally
 # require the measured cost table and the configured flush policy
 OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists",
-                     "cost_model", "flush_policy", "guard", "faults",
-                     "guard_overhead_pct", "guard_overhead_ratios")
+                     "cost_model", "cost_model_paths", "flush_policy",
+                     "guard", "faults", "guard_overhead_pct",
+                     "guard_overhead_ratios", "strategy",
+                     "family_strategies", "selection", "flush_decisions")
 
 FLUSH_POLICIES = ("eager", "watermark", "cost")
 GUARD_POLICIES = ("off", "finite")
+STRATEGIES = ("s1", "s2", "s3", "s2+s3", "fused", "mixed")
+# the strategies allowed to own the fastest row of an artifact: the
+# explicitly aggregated modes and the per-family router (which may route
+# SOME families to s2/fused, but only by measured cost)
+AGGREGATED_MIN_STRATEGIES = ("s3", "s2+s3", "mixed")
+FAMILY_ROUTES = ("s2", "s3", "fused")
+COST_PATHS = ("s2", "s3", "fused")
 
 
 def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
@@ -67,10 +85,40 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
                     for v in cost.values())):
         problems.append(f"{path}: rows[{i}] 'cost_model' must map family "
                         f"-> non-empty {{bucket: median ms}} table")
+    paths_tbl = row.get("cost_model_paths")
+    if paths_tbl is not None and not (
+            isinstance(paths_tbl, dict)
+            and all(isinstance(per_path, dict) and per_path
+                    and all(p in COST_PATHS for p in per_path)
+                    and all(isinstance(tbl, dict) and tbl
+                            and all(isinstance(ms, (int, float)) and ms >= 0
+                                    for ms in tbl.values())
+                            for tbl in per_path.values())
+                    for per_path in paths_tbl.values())):
+        problems.append(f"{path}: rows[{i}] 'cost_model_paths' must map "
+                        f"family -> path ({COST_PATHS}) -> non-empty "
+                        f"{{batch/width: median ms}} table")
     policy = row.get("flush_policy")
-    if policy is not None and policy not in FLUSH_POLICIES:
-        problems.append(f"{path}: rows[{i}] 'flush_policy' must be one of "
-                        f"{FLUSH_POLICIES}, got {policy!r}")
+    if policy is not None:
+        # per-family flush policies (DESIGN.md §12) are a family->policy
+        # mapping; scalar rows keep the plain string
+        ok = (policy in FLUSH_POLICIES if isinstance(policy, str)
+              else isinstance(policy, dict) and policy
+              and all(v in FLUSH_POLICIES for v in policy.values()))
+        if not ok:
+            problems.append(f"{path}: rows[{i}] 'flush_policy' must be one "
+                            f"of {FLUSH_POLICIES} or a family->policy "
+                            f"mapping, got {policy!r}")
+    decisions = row.get("flush_decisions")
+    if decisions is not None and not (
+            isinstance(decisions, dict) and decisions
+            and all(isinstance(d, dict)
+                    and {"policy", "consulted", "full_wave",
+                         "drained_early", "held"} <= set(d)
+                    for d in decisions.values())):
+        problems.append(f"{path}: rows[{i}] 'flush_decisions' must map "
+                        f"family -> decision-counter dict (policy/consulted/"
+                        f"full_wave/drained_early/held)")
     guard = row.get("guard")
     if guard is not None and guard not in GUARD_POLICIES:
         problems.append(f"{path}: rows[{i}] 'guard' must be one of "
@@ -93,18 +141,49 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
             and all(isinstance(x, (int, float)) and x > 0 for x in ratios)):
         problems.append(f"{path}: rows[{i}] 'guard_overhead_ratios' must "
                         f"be a non-empty list of positive ratios")
+    strategy = row.get("strategy")
+    if strategy is not None and strategy not in STRATEGIES:
+        problems.append(f"{path}: rows[{i}] 'strategy' must be one of "
+                        f"{STRATEGIES}, got {strategy!r}")
+    fam_strats = row.get("family_strategies")
+    if fam_strats is not None and not (
+            isinstance(fam_strats, dict) and fam_strats
+            and all(v in FAMILY_ROUTES + ("auto",)
+                    for v in fam_strats.values())):
+        problems.append(f"{path}: rows[{i}] 'family_strategies' must map "
+                        f"family -> one of {FAMILY_ROUTES + ('auto',)}")
+    selection = row.get("selection")
+    if selection is not None and not (
+            isinstance(selection, dict) and selection
+            and all(isinstance(s, dict)
+                    and s.get("selected_strategy") in FAMILY_ROUTES
+                    for s in selection.values())):
+        problems.append(f"{path}: rows[{i}] 'selection' must map family -> "
+                        f"{{selected_strategy in {FAMILY_ROUTES}, "
+                        f"strategy_costs}}")
     tag = str(row.get("config", ""))
+    hists_any = hists if hists is not None \
+        else row.get("bucket_hist_by_family")
     if "guard" in tag and (guard is None or faults is None):
         problems.append(f"{path}: rows[{i}] is a guard row but lacks "
                         f"'guard'/'faults'")
     if "ladder" in tag and (ladder is None or hists is None):
         problems.append(f"{path}: rows[{i}] is a ladder-sweep row but "
                         f"lacks 'ladder'/'region_hists'")
-    if "cost" in tag and (ladder is None or hists is None or cost is None
-                          or policy is None):
+    if "cost" in tag and (ladder is None or hists_any is None
+                          or cost is None or policy is None):
         problems.append(f"{path}: rows[{i}] is a cost-model-tuned row but "
-                        f"lacks one of 'ladder'/'region_hists'/"
+                        f"lacks one of 'ladder'/bucket hists/"
                         f"'cost_model'/'flush_policy'")
+    if (strategy == "mixed" or "mixed" in tag) and (
+            fam_strats is None or selection is None):
+        problems.append(f"{path}: rows[{i}] is a mixed row but lacks "
+                        f"'family_strategies'/'selection' (the per-family "
+                        f"assignment and the measured justification)")
+    if "policy" in tag and decisions is None:
+        problems.append(f"{path}: rows[{i}] is an adaptive-drain policy "
+                        f"row but lacks 'flush_decisions' (the decision "
+                        f"trace is the point of the row)")
     return problems
 
 
@@ -132,7 +211,51 @@ def check_file(path: str) -> List[str]:
             if key not in row:
                 problems.append(f"{path}: rows[{i}] missing {key!r}")
         problems.extend(_check_optional_row(path, i, row))
+    problems.extend(_check_aggregated_min(path, rows))
     return problems
+
+
+def _row_strategy(row: dict) -> str:
+    """The row's strategy, falling back to a tag heuristic for artifacts
+    produced before rows carried an explicit 'strategy' field."""
+    strategy = row.get("strategy")
+    if strategy is not None:
+        return str(strategy)
+    tag = str(row.get("config", ""))
+    if tag.startswith("mixed"):
+        return "mixed"
+    if tag.startswith("s2s3") or tag.startswith("s2+s3"):
+        return "s2+s3"
+    if tag.startswith("s3"):
+        return "s3"
+    if tag.startswith("s2"):
+        return "s2"
+    return "fused" if tag.startswith("fused") else "?"
+
+
+def _check_aggregated_min(path: str, rows: List[dict]) -> List[str]:
+    """The DESIGN.md §12 perf gate: the fastest row of every artifact must
+    be an aggregated or mixed strategy.  Diagnostic rows that measure a
+    contained failure (fault smoke) rather than a steady-state step are
+    excluded — their wall time is one aborted step, not a strategy."""
+    timed = [(i, r) for i, r in enumerate(rows)
+             if isinstance(r, dict)
+             and isinstance(r.get("ms_per_step"), (int, float))
+             and "faultsmoke" not in str(r.get("config", ""))]
+    if not timed:
+        return []
+    i, best = min(timed, key=lambda ir: ir[1]["ms_per_step"])
+    strategy = _row_strategy(best)
+    if strategy in AGGREGATED_MIN_STRATEGIES:
+        return []
+    ranked = sorted((r["ms_per_step"], str(r.get("config")),
+                     _row_strategy(r)) for _, r in timed)
+    table = ", ".join(f"{tag}[{s}]={ms}" for ms, tag, s in ranked[:4])
+    return [f"{path}: fastest row rows[{i}] "
+            f"({best.get('config')!r}, {best['ms_per_step']} ms/step) is "
+            f"strategy {strategy!r} — an aggregated or mixed row "
+            f"({AGGREGATED_MIN_STRATEGIES}) must be the minimum "
+            f"ms_per_step; leaders: {table}"]
 
 
 def main(argv: List[str]) -> int:

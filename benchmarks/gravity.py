@@ -23,7 +23,9 @@ import os
 from typing import List
 
 import jax
-from bench_util import WM, hist_deltas, region_hists, time_per_step
+from bench_util import WM, hist_deltas, region_cost_models, \
+    region_cost_paths, region_hists, region_ladders, region_selection, \
+    time_per_step
 
 from repro.configs.base import AggregationConfig
 from repro.configs.gravity import CONFIG, CONFIG_SMALL
@@ -38,22 +40,35 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 def run(cfg, steps: int, repeats: int) -> List[dict]:
     st = sedov_init(cfg.hydro)
     dt = courant_dt(st.u, cfg.hydro)
+    scn = GravityScenario(cfg)    # shared: one set of traced family bodies
     rows = []
     # the *_epi rows drive the TWO-FAMILY epilogue-fused stage protocol
     # (DESIGN.md §10): each RK stage submits the hydro axpy-fused twin AND
     # the gravity relaxation interleaved in the same wave, bit-identical
     # to the fused stage reference (pinned in tests/test_gravity.py)
+    # s3_cost_auto is the full-kit aggregated row (auto-tuned ladder,
+    # chunked epilogue-fused mega-buckets, measured bucket costs);
+    # mixed_auto routes hydro and gravity independently to their measured
+    # fastest path (DESIGN.md §12) — the two families genuinely differ
+    # (the gravity relaxation is much cheaper per task than the hydro
+    # Reconstruct+Flux), so per-family routing is where this sweep's win
+    # lives.  The resolved assignment and the measured per-path costs
+    # ride in the mixed row.
     for tag, strat, n_exec, max_agg, knobs in [
         ("s2", "s2", 4, 1, {}),
         ("s3", "s3", 1, 16, {}),
         ("s2s3", "s2+s3", 4, 16, {}),
         ("s3_epi", "s3", 1, 16, dict(fuse_epilogue=True)),
+        ("s3_cost_auto", "s3", 1, 64,
+         dict(autotune=True, inner_chunk="auto", cost_model=True)),
+        ("mixed_auto", "mixed", 4, 64,
+         dict(autotune=True, inner_chunk="auto", cost_model=True)),
         ("fused_per_family", "fused", 1, 1, {}),
     ]:
         agg = AggregationConfig(strategy=strat, n_executors=n_exec,
                                 max_aggregated=max_agg, launch_watermark=WM,
                                 **knobs)
-        r = StrategyRunner(GravityScenario(cfg), agg)
+        r = StrategyRunner(scn, agg)
         r.warmup()                           # AOT gather/prefix buckets
         r.rk3_step(st.u, dt)                 # compile remaining programs
         r.stats["kernel_launches"] = 0
@@ -66,15 +81,25 @@ def run(cfg, steps: int, repeats: int) -> List[dict]:
         regions = hist_deltas(region_hists(r), warm_hists)
         rows.append({
             "config": tag,
+            "strategy": strat,
             "ms_per_step": round(sec * 1e3, 3),
             "ms_per_step_samples": [round(s * 1e3, 3) for s in samples],
             "launches_per_step": launches,
-            "launches_by_family_per_step": by_family,
+            "launches_by_family_per_step": by_family or None,
             "fuse_epilogue": bool(knobs.get("fuse_epilogue", False)),
             "flush_policy": agg.flush_policy,
             "n_families": len(regions) or None,
             "bucket_hist_by_family": regions or None,
         })
+        if knobs.get("cost_model"):
+            rows[-1]["ladder"] = region_ladders(r)
+            rows[-1]["cost_model"] = region_cost_models(r) or None
+        if strat == "mixed":
+            rows[-1]["family_strategies"] = (
+                dict(agg.family_strategies) if agg.family_strategies
+                else {"*": "auto"})
+            rows[-1]["selection"] = region_selection(r) or None
+            rows[-1]["cost_model_paths"] = region_cost_paths(r) or None
         print(f"  {tag:18s} {rows[-1]['ms_per_step']:9.2f} ms/step  "
               f"launches/step {launches:.0f}  families {regions or '-'}")
     return rows

@@ -24,8 +24,16 @@ histograms.  ``s3_cost_auto`` is the DESIGN.md §10 row: the tuner TIMES
 every drain-reachable bucket and derives the ladder minimizing predicted
 wall time per wave (launch counts are a proxy; the measured table rides in
 the row as ``cost_model``, the configured drain policy as
-``flush_policy``).  All wall times are MEDIANS of per-repeat means (raw
-samples ride along in the JSON).
+``flush_policy``).  ``s3_cost_policy`` is the TIMED adaptive-drain row: a
+NON-pinned watermark where the "cost" policy consults the measured bucket
+table per drain opportunity (its decision trace rides in the row as
+``flush_decisions``).  ``mixed_auto`` is the DESIGN.md §12 row: the
+executor measures every family's s2 / s3 / fused wall time during warmup
+and routes each family to its measured minimum — the resolved assignment
+(``family_strategies``), the per-family verdicts (``selection``), and the
+multi-path cost tables (``cost_model_paths``) ride in the row.  All wall
+times are MEDIANS of per-repeat means (raw samples ride along in the
+JSON).
 
   PYTHONPATH=src python benchmarks/launch_overhead.py [--full] [--steps N]
 
@@ -42,8 +50,9 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-from bench_util import WM, hist_deltas, paired_overhead_pct, \
-    region_cost_models, region_hists, region_ladders, time_per_step
+from bench_util import WM, flush_decision_trace, hist_deltas, \
+    paired_overhead_pct, region_cost_models, region_cost_paths, \
+    region_hists, region_ladders, region_selection, time_per_step
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import StrategyRunner, UniformSedovScenario
@@ -137,10 +146,12 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     rows = []
 
     def record(tag, sec, launches, staging_s, dispatch_s: Optional[float],
-               samples=None, ladder=None, hists=None, cost=None,
-               flush_policy=None, guard=None, faults=None):
+               strategy=None, samples=None, ladder=None, hists=None,
+               cost=None, cost_paths=None, flush_policy=None, guard=None,
+               faults=None, family_strategies=None, selection=None,
+               flush_decisions=None):
         row = {
-            "config": tag, "n_subgrids": n,
+            "config": tag, "strategy": strategy, "n_subgrids": n,
             "ms_per_step": round(sec * 1e3, 3),
             "launches_per_step": launches,
             "staging_ms_per_step": None if staging_s is None
@@ -156,12 +167,20 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
             row["region_hists"] = hists
         if cost is not None:
             row["cost_model"] = cost
+        if cost_paths is not None:
+            row["cost_model_paths"] = cost_paths
         if flush_policy is not None:
             row["flush_policy"] = flush_policy
         if guard is not None:
             row["guard"] = guard
         if faults is not None:
             row["faults"] = faults
+        if family_strategies is not None:
+            row["family_strategies"] = dict(family_strategies)
+        if selection is not None:
+            row["selection"] = selection
+        if flush_decisions is not None:
+            row["flush_decisions"] = flush_decisions
         rows.append(row)
         print(f"  {tag:24s} {row['ms_per_step']:9.2f} ms/step  "
               f"staging {row['staging_ms_per_step']} ms")
@@ -175,7 +194,7 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     sec, samples = time_per_step(seed2.rk3_step, st.u, dt, steps, repeats)
     record("s2_seed_hoststage", sec, 3 * n,
            seed2.staging_s / repeats, seed2.pool.total_dispatch_s / repeats,
-           samples=samples)
+           strategy="s2", samples=samples)
 
     # launch_watermark is pinned high on the s3 A/B rows so both staging
     # modes drain with the IDENTICAL greedy bucket sequence — watermark
@@ -197,7 +216,8 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
         record(tag, sec,
                seed3.exe.stats["launches"] // (steps * repeats),
                (seed3.staging_s + seed3.exe.stats["staging_s"]) / repeats,
-               seed3.exe.pool.total_dispatch_s / repeats, samples=samples)
+               seed3.exe.pool.total_dispatch_s / repeats,
+               strategy="s3" if n_exec == 1 else "s2+s3", samples=samples)
 
     # -- the DESIGN.md §9 hot path + ladder sweep -------------------------
     # s3/s2+s3 rows run bulk submission + epilogue-fused mega-buckets with
@@ -244,6 +264,28 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                           autotune=True, inner_chunk="auto",
                           fuse_epilogue=True, cost_model=True,
                           flush_policy="cost", guard="finite")))
+    # the TIMED adaptive-drain row (DESIGN.md §10): unlike every row above,
+    # the watermark is NOT pinned — idle executors may drain early, and the
+    # "cost" policy consults the measured bucket table to decide whether an
+    # early partial drain beats waiting for the full wave.  The per-family
+    # decision trace (consulted / drained_early / held counters) rides in
+    # the row, so the policy's behaviour is observable, not just its cost.
+    # max_aggregated is 2n: at exactly n the bulk-submitted wave hits the
+    # cap branch, which flushes unconditionally — the policy would never
+    # be consulted and the trace would be empty.
+    agg_rows.append(("s3_cost_policy", "s3", 1,
+                     dict(max_aggregated=2 * n, launch_watermark=1,
+                          autotune=True, inner_chunk="auto",
+                          fuse_epilogue=True, cost_model=True,
+                          flush_policy="cost")))
+    # the DESIGN.md §12 row: cost-driven per-family routing.  The executor
+    # measures every family's s2 / s3 / fused wall time during warmup and
+    # ``select_strategy`` routes each family to its measured minimum; the
+    # resolved assignment and the costs that justified it ride in the row.
+    agg_rows.append(("mixed_auto", "mixed", 4,
+                     dict(max_aggregated=n, launch_watermark=WM,
+                          autotune=True, inner_chunk="auto",
+                          fuse_epilogue=True, cost_model=True)))
     scn = UniformSedovScenario(cfg)   # shared: one body, one chunk tuning
     runners = {}                      # kept alive for the paired guard A/B
     for tag, strat, n_exec, knobs in agg_rows:
@@ -254,6 +296,7 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
         r.rk3_step(st.u, dt)          # warmup/compile (autotune retunes
         warm_hists = region_hists(r)  # mid-step: 3 waves > warmup=2)
         r.stats["staging_s"] = 0.0
+        r.stats["kernel_launches"] = 0
         if r.executor is not None:
             r.executor.stats["staging_s"] = 0.0
             r.executor.stats["launches"] = 0
@@ -264,23 +307,34 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                      if r.executor is not None else 0.0)
         launches = (3 * n if strat == "s2"
                     else 3 if strat == "fused"
+                    else r.stats["kernel_launches"] / (steps * repeats)
+                    if strat == "mixed"
                     else r.executor.stats["launches"] // (steps * repeats))
         aggregated = r.executor is not None
         guard_val = getattr(agg, "guard", "off")
         fault_stats = None
         if aggregated and guard_val != "off":
             fault_stats = {fam: dict(s["faults"])
-                           for fam, s in r.executor.stats["regions"].items()}
+                           for fam, s in r.executor.stats["regions"].items()
+                           if "faults" in s}
+        mixed = strat == "mixed"
         record(tag, sec, launches, staging_s / repeats,
-               r.pool.total_dispatch_s / repeats, samples=samples,
+               r.pool.total_dispatch_s / repeats, strategy=strat,
+               samples=samples,
                ladder=region_ladders(r) if aggregated else None,
                hists=(hist_deltas(region_hists(r), warm_hists)
                       if aggregated else None),
                cost=region_cost_models(r) or None,
+               cost_paths=(region_cost_paths(r) or None) if mixed else None,
                flush_policy=(getattr(agg, "flush_policy", "eager")
                              if aggregated else None),
                guard=guard_val if guard_val != "off" else None,
-               faults=fault_stats)
+               faults=fault_stats,
+               family_strategies=(dict(agg.family_strategies)
+                                  if agg.family_strategies else {"*": "auto"})
+               if mixed else None,
+               selection=(region_selection(r) or None) if mixed else None,
+               flush_decisions=(flush_decision_trace(r) or None))
         if tag in ("s3_cost_auto", "s3_cost_auto_guard"):
             runners[tag] = r
     # guarded-vs-unguarded overhead (the <= 5% acceptance metric).  The
@@ -324,7 +378,7 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
     fault_stats = {fam: dict(s["faults"])
                    for fam, s in r.executor.stats["regions"].items()}
     record("s3_guard_faultsmoke", smoke_sec,
-           r.executor.stats["launches"], 0.0, None,
+           r.executor.stats["launches"], 0.0, None, strategy="s3",
            guard="finite", faults=fault_stats)
 
     # -- scan trajectory: whole multi-step RK3 as one program -------------
@@ -339,7 +393,7 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
         jax.block_until_ready(out)
         samples.append((time.perf_counter() - t0) / steps)
     record("fused_scan_bound", statistics.median(samples), 1.0 / steps,
-           0.0, None, samples=samples)
+           0.0, None, strategy="fused", samples=samples)
     return rows
 
 

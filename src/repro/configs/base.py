@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +212,17 @@ class AggregationConfig:
     # split drain beats waiting for the fuller bucket.  Policies affect
     # WHEN launches fire, never submission order, so results stay
     # bit-identical to eager (flush() drains every queue regardless).
-    flush_policy: str = "eager"       # "eager" | "watermark" | "cost"
+    # May also be a mapping {kernel: policy} for per-family policies
+    # (resolved via resolve_family_option: exact kernel, then the "+epi"
+    # stage twin's base kernel, then the "*" wildcard, then "eager").
+    flush_policy: object = "eager"    # policy name, or {kernel: policy}
+    # Per-family strategy routing (DESIGN.md §12): the "mixed" strategy
+    # routes each kernel family independently to "s2" (scatter ring),
+    # "s3" (bucketed aggregation through the executor) or "fused" (one
+    # whole-family launch).  ``None`` / missing kernels mean "auto": pick
+    # from measured cost (``select_strategy``) when ``cost_model=True``,
+    # else default to "s3".  Keys resolve like flush_policy mappings.
+    family_strategies: Optional[Mapping[str, str]] = None
     # Blast-radius containment (DESIGN.md §11): with ``guard="finite"``,
     # ``flush()`` runs ONE scalar all-finite check per drained launch; a
     # tripped bucket is re-executed by bisection down the ladder until the
@@ -273,6 +283,30 @@ def validate_ladder(buckets, cap: int) -> Tuple[int, ...]:
         raise ValueError(
             f"invalid bucket ladder {buckets!r}: " + "; ".join(problems))
     return b
+
+
+# valid targets of per-family strategy routing (the "mixed" strategy);
+# "auto" defers to the measured cost model (DESIGN.md §12)
+FAMILY_STRATEGY_CHOICES = ("s2", "s3", "fused", "auto")
+
+
+def resolve_family_option(value, kernel: str, default):
+    """Resolve a possibly per-family (mapping-valued) config knob for one
+    kernel family.  Lookup order: the exact kernel id, then — for an
+    epilogue-fused stage twin ``<base>+epi`` — its base kernel, then the
+    ``"*"`` wildcard, then ``default``.  A plain (non-mapping) value
+    applies to every family; ``None`` means ``default``."""
+    if value is None:
+        return default
+    if not isinstance(value, Mapping):
+        return value
+    if kernel in value:
+        return value[kernel]
+    if kernel.endswith("+epi"):
+        base = kernel[:-len("+epi")]
+        if base in value:
+            return value[base]
+    return value.get("*", default)
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +445,7 @@ class GravityHydroConfig:
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "ParallelConfig", "AggregationConfig",
-    "validate_ladder",
+    "validate_ladder", "FAMILY_STRATEGY_CHOICES", "resolve_family_option",
     "HydroConfig", "AMRHydroConfig", "GravityHydroConfig",
     "ALL_SHAPES", "SHAPES_BY_NAME",
     "shape_applicable",

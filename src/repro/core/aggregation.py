@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import AggregationConfig
+from repro.configs.base import AggregationConfig, resolve_family_option
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import ExecutorPool
 from repro.core.faults import (
@@ -493,61 +493,112 @@ class BucketCostModel:
     against one-shot predictions.  ``as_stats`` is the JSON-safe table
     persisted into ``stats["regions"][fam]["cost_model"]`` and the BENCH
     rows (milliseconds, bucket-keyed).
+
+    Execution paths (DESIGN.md §12): every method takes an optional
+    ``path``.  The default ``"s3"`` table holds the bucketed-program
+    timings above; ``"s2"`` holds per-launch times of the donated
+    scatter-ring program keyed by coalesce WIDTH, and ``"fused"`` holds
+    the one-launch whole-wave body keyed by wave size — so
+    ``select_strategy`` compares all three strategies' measured wall
+    times in one currency.
     """
 
-    __slots__ = ("samples",)
+    __slots__ = ("samples", "_paths")
 
     def __init__(self):
         self.samples: Dict[int, List[float]] = {}
+        # path -> {bucket/width: raw samples}; "s3" aliases ``samples``
+        # so the historical single-table surface keeps working unchanged
+        self._paths: Dict[str, Dict[int, List[float]]] = {"s3": self.samples}
 
-    def record(self, bucket: int, seconds: float) -> None:
-        self.samples.setdefault(int(bucket), []).append(float(seconds))
+    def _table(self, path: str) -> Dict[int, List[float]]:
+        t = self._paths.get(path)
+        if t is None:
+            t = self._paths[path] = {}
+        return t
+
+    def record(self, bucket: int, seconds: float, path: str = "s3") -> None:
+        self._table(path).setdefault(int(bucket), []).append(float(seconds))
 
     def clear(self) -> None:
-        """Drop every sample (the measurements' premise changed — e.g. the
-        region's inner chunk was re-swept, so old timings describe programs
-        that no longer exist)."""
-        self.samples.clear()
+        """Drop every sample on every path (the measurements' premise
+        changed — e.g. the region's inner chunk was re-swept, so old
+        timings describe programs that no longer exist)."""
+        for table in self._paths.values():
+            table.clear()
 
-    def measured(self) -> bool:
-        return bool(self.samples)
+    def measured(self, path: str = "s3") -> bool:
+        return bool(self._paths.get(path))
 
-    def buckets(self) -> Tuple[int, ...]:
-        return tuple(sorted(self.samples))
+    def paths(self) -> Tuple[str, ...]:
+        """The execution paths with at least one measurement."""
+        return tuple(sorted(p for p, t in self._paths.items() if t))
 
-    def time(self, bucket: int) -> Optional[float]:
-        s = self.samples.get(bucket)
+    def buckets(self, path: str = "s3") -> Tuple[int, ...]:
+        return tuple(sorted(self._paths.get(path, ())))
+
+    def time(self, bucket: int, path: str = "s3") -> Optional[float]:
+        s = self._paths.get(path, {}).get(bucket)
         return statistics.median(s) if s else None
 
-    def predict(self, bucket: int) -> float:
-        t = self.time(bucket)
+    def predict(self, bucket: int, path: str = "s3") -> float:
+        t = self.time(bucket, path)
         if t is not None:
             return t
-        bs = self.buckets()
+        bs = self.buckets(path)
         if not bs:
             raise ValueError("cost model has no measurements — check "
                              "measured() before predicting")
         if bucket <= bs[0]:
-            return self.time(bs[0])
+            return self.time(bs[0], path)
         if bucket >= bs[-1]:
-            hi = self.time(bs[-1])
+            hi = self.time(bs[-1], path)
             if len(bs) == 1:
                 return hi * bucket / bs[-1]
-            lo = self.time(bs[-2])
+            lo = self.time(bs[-2], path)
             slope = (hi - lo) / (bs[-1] - bs[-2])
             return max(hi, hi + slope * (bucket - bs[-1]))
         i = bisect.bisect_left(bs, bucket)
         b0, b1 = bs[i - 1], bs[i]
-        t0, t1 = self.time(b0), self.time(b1)
+        t0, t1 = self.time(b0, path), self.time(b1, path)
         return t0 + (t1 - t0) * (bucket - b0) / (b1 - b0)
 
-    def predict_seq(self, buckets: Sequence[int]) -> float:
+    def predict_seq(self, buckets: Sequence[int], path: str = "s3") -> float:
         """Predicted wall time of one greedy drain (launch sequence)."""
-        return sum(self.predict(b) for b in buckets)
+        return sum(self.predict(b, path) for b in buckets)
 
-    def as_stats(self) -> Dict[int, float]:
+    def predict_s2_wave(self, wave: int) -> Optional[Tuple[int, float]]:
+        """(best coalesce width, predicted seconds) for scattering a
+        ``wave``-task population through the measured s2 widths: each
+        width-w launch covers w tasks, the remainder falls back to the
+        width-1 program.  None before any "s2" measurement (or when a
+        remainder would need an unmeasured width-1 program)."""
+        ws = self.buckets("s2")
+        if not ws:
+            return None
+        best = None
+        for w in ws:
+            if w > wave:
+                continue
+            rem = wave % w
+            if rem and 1 not in ws:
+                continue
+            t = (wave // w) * self.predict(w, "s2")
+            if rem:
+                t += rem * self.predict(1, "s2")
+            if best is None or t < best[1]:
+                best = (w, t)
+        return best
+
+    def as_stats(self, path: str = "s3") -> Dict[int, float]:
         """{bucket: median milliseconds}, rounded for the stats surface."""
-        return {b: round(self.time(b) * 1e3, 4) for b in self.buckets()}
+        return {b: round(self.time(b, path) * 1e3, 4)
+                for b in self.buckets(path)}
+
+    def as_stats_paths(self) -> Dict[str, Dict[int, float]]:
+        """Every measured path's table — the DESIGN.md §12 observability
+        surface backing per-family strategy selection."""
+        return {p: self.as_stats(p) for p in self.paths()}
 
 
 def greedy_decomposition(k: int, buckets: Sequence[int]) -> Tuple[int, ...]:
@@ -568,6 +619,84 @@ def greedy_launches(k: int, buckets: Sequence[int]) -> int:
     """Launches the greedy drain performs for a queue of length k under a
     valid ladder (shared oracle; tests mirror it in conftest.py)."""
     return len(greedy_decomposition(k, buckets))
+
+
+# ---------------------------------------------------------------------------
+# s2 scatter-ring programs (DESIGN.md §12) — shared by the ``s2`` strategy,
+# the ``mixed`` router and the executor's cost-model measurement pass, so
+# the program that gets TIMED is byte-for-byte the program that RUNS.
+# ---------------------------------------------------------------------------
+
+def make_s2_scatter(batched_fn: Callable, width: int = 1) -> Callable:
+    """One s2 launch: slice ``width`` contiguous tasks out of the parent
+    arrays, run the batched body over them, scatter the results into a
+    donated output ring — ONE compiled program, zero host staging.  Width
+    1 is the paper's implicit aggregation; larger widths coalesce
+    neighbouring tasks into one launch (ring sizing driven by the
+    measured cost model).  Bit-identity holds for every width: the body
+    is elementwise over the slot axis, so a width-w slice computes
+    exactly the same values as w width-1 slices."""
+    @partial(jax.jit, donate_argnums=(0,))
+    def scatter(out_ring, i, *parents):
+        task = tuple(jax.lax.dynamic_slice_in_dim(p, i, width, axis=0)
+                     for p in parents)
+        return jax.lax.dynamic_update_slice(
+            out_ring, batched_fn(*task), (i,) + (0,) * (out_ring.ndim - 1))
+    return scatter
+
+
+def s2_width_candidates(wave: int) -> Tuple[int, ...]:
+    """The coalesce widths the s2 cost measurement probes: 1 (the classic
+    per-task scatter), 2, and the largest power of two fitting the wave.
+    Every distinct width is a full XLA compile of the family body, so the
+    probe set stays at three points — the endpoints bound the
+    per-launch-overhead vs. batch-scaling tradeoff, and width 2 exposes a
+    superlinear body (one where coalescing LOSES) without paying for the
+    intermediate powers."""
+    top = 1
+    while top * 2 <= wave:
+        top *= 2
+    return tuple(sorted({1, min(2, wave), top}))
+
+
+def measure_s2_widths(batched_fn: Callable, parents: Sequence[Any],
+                      widths: Sequence[int], samples: int = 3,
+                      cache: Optional[Dict[int, Callable]] = None
+                      ) -> Dict[int, float]:
+    """Time the donated scatter program per coalesce width on zero-filled
+    parents: one warm (compile) call, then the median of ``samples`` timed
+    launches each.  Returns {width: seconds per launch}.  ``cache`` (if
+    given) receives the compiled scatter fns keyed by width, so a caller
+    that will RUN the winning width reuses the warmed program.  Bodies
+    whose batched output is not a single array skip measurement (the
+    scatter ring is a single donated buffer)."""
+    concrete = tuple(jnp.zeros(tuple(p.shape), p.dtype) for p in parents)
+    wave = min(p.shape[0] for p in concrete)
+    try:
+        spec = jax.eval_shape(batched_fn, *concrete)
+    except (TypeError, ValueError):
+        return {}
+    if not hasattr(spec, "shape"):           # pytree output: no single ring
+        return {}
+    out: Dict[int, float] = {}
+    for w in sorted(set(widths)):
+        if w > wave:
+            continue
+        fn = make_s2_scatter(batched_fn, w)
+        ring = jnp.zeros(spec.shape, spec.dtype)
+        i0 = jnp.int32(0)
+        ring = fn(ring, i0, *concrete)                 # compile + warm
+        jax.block_until_ready(ring)
+        ts = []
+        for _ in range(max(1, samples)):
+            t0 = time.perf_counter()
+            ring = fn(ring, i0, *concrete)
+            jax.block_until_ready(ring)
+            ts.append(time.perf_counter() - t0)
+        out[w] = statistics.median(ts)
+        if cache is not None:
+            cache[w] = fn
+    return out
 
 
 def ladder_candidates(queue_hist: Mapping[int, int], cap: int) -> set:
@@ -703,7 +832,7 @@ class _Region:
                  "chunk_tuned", "queued_tasks", "waves", "tuned",
                  "_wave_peak", "_aot_parents", "cost", "_retuned_waves",
                  "_retuned_peak", "_donate", "quarantine", "bad_buckets",
-                 "_wave_submitted")
+                 "_wave_submitted", "warmup_wave")
 
     def __init__(self, signature: TaskSignature, batched_fn: Callable,
                  donate: bool, buckets: Tuple[int, ...] = (1,),
@@ -729,6 +858,7 @@ class _Region:
         self.quarantine = QuarantineList(threshold=quarantine_threshold)
         self.bad_buckets: set = set()     # rungs banned by degraded mode
         self._wave_submitted = 0      # wave-relative task ids, reset per wave
+        self.warmup_wave = 0          # wave size warmup was told about (§12)
         # shared shape-polymorphic wrappers (jit re-specializes per shape,
         # so ONE wrapper serves every bucket / parent shape)
         self.reset_compiled()
@@ -873,10 +1003,14 @@ class AggregationExecutor:
         if self._staging not in ("device", "host"):
             raise ValueError(f"unknown staging mode {self._staging!r}")
         self._flush_policy = getattr(self.config, "flush_policy", "eager")
-        if self._flush_policy not in ("eager", "watermark", "cost"):
-            raise ValueError(
-                f"unknown flush_policy {self._flush_policy!r} — valid "
-                f"policies: eager, watermark, cost")
+        fp_values = (self._flush_policy.values()
+                     if isinstance(self._flush_policy, Mapping)
+                     else (self._flush_policy,))
+        for fp in fp_values:
+            if fp not in ("eager", "watermark", "cost"):
+                raise ValueError(
+                    f"unknown flush_policy {fp!r} — valid "
+                    f"policies: eager, watermark, cost")
         self._cost_on = bool(getattr(self.config, "cost_model", False))
         self._cost_samples = max(1, int(getattr(self.config,
                                                 "cost_samples", 3)))
@@ -906,7 +1040,10 @@ class AggregationExecutor:
         # live under "regions" (the multi-signature observability surface)
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
                       "staging_s": 0.0, "regions": {},
-                      "flush_policy": self._flush_policy}
+                      "flush_policy": (dict(self._flush_policy)
+                                       if isinstance(self._flush_policy,
+                                                     Mapping)
+                                       else self._flush_policy)}
         if batched_fn is not None:
             self.register(name, batched_fn)
 
@@ -1046,6 +1183,7 @@ class AggregationExecutor:
             if self._chunk_auto and not region.chunk_tuned:
                 self._tune_chunk(region, parents)
             n_parent = min(p.shape[0] for p in parents)
+            region.warmup_wave = max(region.warmup_wave, n_parent)
             for b in (b for b in aot_buckets(region) if b <= n_parent):
                 region.aot_ref(b, parents)
             if self._cost_on:
@@ -1192,8 +1330,106 @@ class AggregationExecutor:
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(start, *concrete))
                 region.cost.record(b, time.perf_counter() - t0)
+        if parents is not None:
+            self._measure_alt_paths(region, concrete)
         if region.cost.measured():
             region.stats["cost_model"] = region.cost.as_stats()
+        if len(region.cost.paths()) > 1:
+            region.stats["cost_model_paths"] = region.cost.as_stats_paths()
+
+    def _measure_alt_paths(self, region: _Region,
+                           concrete: Sequence[Any]) -> None:
+        """Time the OTHER execution strategies' programs for this family
+        (DESIGN.md §12), so ``select_strategy`` compares measured wall
+        times instead of guessing: the s2 donated scatter per coalesce
+        width, and the fused one-launch whole-wave body.  Measured once
+        per region; the s2 widths probed are 1 plus powers of two up to
+        the wave size."""
+        wave = min(c.shape[0] for c in concrete)
+        if not wave:
+            return
+        if not region.cost.measured("s2"):
+            widths = measure_s2_widths(region.batched_fn, concrete,
+                                       s2_width_candidates(wave),
+                                       samples=self._cost_samples)
+            for w, t in widths.items():
+                region.cost.record(w, t, path="s2")
+        if not region.cost.measured("fused"):
+            fn = jax.jit(region.batched_fn)
+            try:
+                jax.block_until_ready(fn(*concrete))           # warm call
+            except (TypeError, ValueError):
+                return                    # body rejects the flat whole wave
+            for _ in range(self._cost_samples):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*concrete))
+                region.cost.record(wave, time.perf_counter() - t0,
+                                   path="fused")
+
+    # -- per-family strategy selection (DESIGN.md §12) ---------------------
+    def strategy_costs(self, kernel: str) -> Dict[str, Any]:
+        """Predicted per-wave wall time (ms) of running ``kernel``'s wave
+        under each measured execution strategy — the selection rationale
+        persisted into the BENCH rows.  Empty before any measurement."""
+        region = self._primary_region(kernel)
+        if region is None:
+            return {}
+        wave = region.expected_peak() or region.warmup_wave
+        if not wave:
+            return {}
+        out: Dict[str, Any] = {}
+        if region.cost.measured("s3"):
+            ladder = [b for b in region.buckets
+                      if b not in region.bad_buckets] or [1]
+            out["s3"] = round(region.cost.predict_seq(
+                greedy_decomposition(wave, ladder)) * 1e3, 4)
+        s2 = region.cost.predict_s2_wave(wave)
+        if s2 is not None:
+            out["s2"] = round(s2[1] * 1e3, 4)
+            out["s2_width"] = s2[0]
+        if region.cost.measured("fused"):
+            out["fused"] = round(region.cost.predict(wave, "fused") * 1e3, 4)
+        return out
+
+    def select_strategy(self, kernel: str) -> str:
+        """Pick the cheapest measured execution strategy for ``kernel``'s
+        steady wave ("s2" | "s3" | "fused"; ties prefer "s3" — the
+        aggregated path — then "s2").  Defaults to "s3" before any
+        measurement.  The choice and its justification land in
+        ``stats["regions"][fam]["selected_strategy"]`` /
+        ``["strategy_costs"]``."""
+        costs = self.strategy_costs(kernel)
+        order = ("s3", "s2", "fused")
+        timed = [(costs[s], order.index(s)) for s in order if s in costs]
+        choice = min(timed)[1] if timed else 0
+        selected = order[choice]
+        region = self._primary_region(kernel)
+        if region is not None:
+            region.stats["selected_strategy"] = selected
+            if costs:
+                region.stats["strategy_costs"] = costs
+        return selected
+
+    def record_selection(self, kernel: str, selected: str) -> None:
+        """Persist an EXPLICIT per-family route (``family_strategies``)
+        into the region stats, alongside whatever cost numbers exist —
+        explicit and auto-selected assignments surface identically."""
+        region = self._primary_region(kernel)
+        if region is None:
+            return
+        region.stats["selected_strategy"] = selected
+        costs = self.strategy_costs(kernel)
+        if costs:
+            region.stats["strategy_costs"] = costs
+
+    def _primary_region(self, kernel: str) -> Optional[_Region]:
+        """The region selection reasons about for a kernel: the one with
+        the largest wave evidence (several regions per kernel can exist —
+        one per task shape)."""
+        regs = [r for s, r in self._regions.items() if s.kernel == kernel]
+        if not regs:
+            return None
+        return max(regs, key=lambda r: (r.expected_peak() or r.warmup_wave))
 
     # -- submission API ----------------------------------------------------
     def submit(self, *args, kernel: Optional[str] = None) -> TaskFuture:
@@ -1347,6 +1583,13 @@ class AggregationExecutor:
                     self._launch(region, self._largest_bucket(region, q))
                     progress = True
 
+    def _policy_for(self, region: _Region) -> str:
+        """The region's flush policy: the config value, resolved per family
+        when it is a mapping (exact kernel -> "+epi" base -> "*" -> eager,
+        DESIGN.md §12)."""
+        return resolve_family_option(self._flush_policy,
+                                     region.signature.kernel, "eager")
+
     def _idle_drain_pays(self, region: _Region, q: int) -> bool:
         """The watermark-adaptive flush decision (DESIGN.md §10): should a
         partial queue of ``q`` tasks drain into an idle executor, or keep
@@ -1361,15 +1604,29 @@ class AggregationExecutor:
           waiting and draining the full wave in one greedy pass — i.e.
           exactly when the big bucket's measured cost is superlinear
           enough that splitting it is free.
+
+        Non-eager consultations leave a decision trace in
+        ``stats["regions"][fam]["flush_decisions"]`` (consulted /
+        drained_early / held counters), so a policy's behaviour under a
+        live watermark is observable in the BENCH rows.
         """
-        if self._flush_policy == "eager":
+        policy = self._policy_for(region)
+        if policy == "eager":
             return True
+        trace = region.stats.setdefault(
+            "flush_decisions", {"policy": policy, "consulted": 0,
+                                "full_wave": 0, "drained_early": 0,
+                                "held": 0})
+        trace["consulted"] += 1
         peak = region.expected_peak()
         if not peak or q >= peak:
+            trace["full_wave"] += 1
             return True               # no history yet, or a full wave: go
-        if self._flush_policy == "watermark":
+        if policy == "watermark":
+            trace["held"] += 1
             return False
         if not region.cost.measured():
+            trace["drained_early"] += 1
             return True               # "cost" without a model: eager
         split = (region.cost.predict_seq(
                      greedy_decomposition(q, region.buckets))
@@ -1377,7 +1634,9 @@ class AggregationExecutor:
                      greedy_decomposition(peak - q, region.buckets)))
         full = region.cost.predict_seq(
             greedy_decomposition(peak, region.buckets))
-        return split <= full
+        pays = split <= full
+        trace["drained_early" if pays else "held"] += 1
+        return pays
 
     @staticmethod
     def _largest_bucket(region: _Region, k: int) -> int:

@@ -34,6 +34,17 @@ def _is_ready(x) -> bool:
         return True
 
 
+def _is_deleted(x) -> bool:
+    """True if a tracked buffer was donated to (consumed by) a later
+    launch — e.g. an s2 scatter-ring carry.  Such a buffer is not
+    waitable, and needn't be: the chain's liveness rides on the NEWEST
+    buffer, which is tracked too."""
+    try:
+        return bool(x.is_deleted())
+    except AttributeError:
+        return False
+
+
 class DeviceExecutor:
     """One launch queue.  Tracks outstanding results for busy-detection."""
 
@@ -74,7 +85,8 @@ class DeviceExecutor:
         return out
 
     def busy(self) -> bool:
-        self._inflight = [x for x in self._inflight if not _is_ready(x)]
+        self._inflight = [x for x in self._inflight
+                          if not _is_deleted(x) and not _is_ready(x)]
         return bool(self._inflight)
 
     def drain(self) -> None:
@@ -85,6 +97,8 @@ class DeviceExecutor:
         FIRST deferred error is re-raised."""
         first: Optional[BaseException] = None
         for x in self._inflight:
+            if _is_deleted(x):          # donated to a later launch: skip
+                continue
             try:
                 jax.block_until_ready(x)
             except Exception as e:      # deferred device-side error

@@ -13,6 +13,10 @@ any :class:`~repro.core.scenario.Scenario` under any of them:
              ``AggregationExecutor``; populations submit interleaved, so
              heterogeneous families aggregate concurrently.
 * ``s2+s3``— s3 over a multi-executor pool (the paper's best rows).
+* ``mixed``— per-family routing (``mixed.py``): each kernel family goes
+             to s2, s3 or fused independently — explicitly via
+             ``AggregationConfig(family_strategies=...)`` or from the
+             measured cost model (DESIGN.md §12).
 * ``fused``— whole-graph upper bound (``fused.py``), plus the ``lax.scan``
              whole-trajectory driver on the runner.
 
@@ -23,7 +27,7 @@ from repro.core.strategies.base import (
     RunContext, Strategy, available_strategies, get_strategy_class,
     register_strategy,
 )
-from repro.core.strategies import fused, s2, s3   # noqa: F401  (register)
+from repro.core.strategies import fused, mixed, s2, s3  # noqa: F401 (register)
 from repro.core.strategies.runner import (
     AMRStrategyRunner, HydroStrategyRunner, StrategyRunner,
 )

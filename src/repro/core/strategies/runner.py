@@ -60,6 +60,7 @@ class StrategyRunner:
         self._agg_exec: Optional[AggregationExecutor] = None
         self.stats: Dict[str, Any] = {"kernel_launches": 0, "iterations": 0,
                                       "staging_s": 0.0}
+        self._validate_family_strategies(scenario, agg)
         if strategy_cls.uses_executor:
             self._agg_exec = AggregationExecutor(
                 None, agg, pool=self.pool, name=scenario.name,
@@ -69,6 +70,11 @@ class StrategyRunner:
             for fam in scenario.stage_families():
                 self._agg_exec.register(fam.kernel, fam.batched_body)
             self.stats["regions"] = self._agg_exec.stats["regions"]
+        else:
+            # stats parity (DESIGN.md §12): executor-less strategies (s2 /
+            # fused) publish per-family counters under the same key, so
+            # the BENCH observability surface is strategy-independent
+            self.stats["regions"] = {}
         self.ctx = RunContext(config=agg, pool=self.pool,
                               executor=self._agg_exec, stats=self.stats)
         # epilogue-fused RK stages (DESIGN.md §9): opt-in via config, only
@@ -84,6 +90,30 @@ class StrategyRunner:
                                and strategy_has_stage
                                and agg.staging != "host")
         self._traj_cache: Dict[int, Callable] = {}
+
+    @staticmethod
+    def _validate_family_strategies(scenario: Scenario,
+                                    agg: AggregationConfig) -> None:
+        """Fail fast on a bad ``family_strategies`` mapping: every value
+        must be a valid route, every key a kernel the scenario can launch
+        (plain or stage family, a "+epi" twin's base, or "*")."""
+        fs = getattr(agg, "family_strategies", None)
+        if not fs:
+            return
+        from repro.configs.base import FAMILY_STRATEGY_CHOICES
+        known = {f.kernel for f in scenario.families()}
+        known |= {f.kernel for f in scenario.stage_families()}
+        valid_keys = known | {"*"}
+        for kernel, choice in fs.items():
+            if choice not in FAMILY_STRATEGY_CHOICES:
+                raise ValueError(
+                    f"family_strategies[{kernel!r}] = {choice!r} — valid "
+                    f"assignments: {FAMILY_STRATEGY_CHOICES}")
+            if kernel not in valid_keys:
+                raise ValueError(
+                    f"family_strategies key {kernel!r} names no kernel "
+                    f"family of scenario {scenario.name!r} — known "
+                    f"families: {sorted(known)} (or '*')")
 
     # -- observability -----------------------------------------------------
     @property

@@ -1,0 +1,384 @@
+"""Per-family strategy routing (``mixed``, DESIGN.md §12).
+
+The acceptance invariants:
+
+* every per-family assignment in the s2/s3/fused product reproduces the
+  fused per-family reference on all three scenarios — bit-identical,
+  except where the repo already documents the s2 caveat
+  (``test_gravity_s2_matches_reference``: the gravity body reassociates
+  1-2 ulp inside the donated scatter program on XLA:CPU, so s2-routed
+  gravity asserts tight allclose instead);
+* random ``family_strategies`` dicts (exact keys, the ``"*"`` wildcard,
+  ``"auto"`` entries) preserve the identity under varying executor-pool
+  interleavings (hypothesis property);
+* the resolved route and its cost-model justification are observable in
+  ``stats["regions"]``;
+* guard="finite" composes with routing: an injected NaN in an s3-routed
+  family is contained by the executor's bisection (``TaskFailedError``
+  naming the culprit), while s2/fused-routed families trip the strategy's
+  own per-family tripwire (``NonFiniteStateError`` naming family+route);
+* bad assignments (unknown family, unknown route) fail fast at runner
+  construction.
+
+Plus unit coverage for the §12 substrate: the multi-path
+``BucketCostModel`` (s2 width tables, ``predict_s2_wave``) and the
+per-family ``flush_policy`` / ``resolve_family_option`` resolution.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.amr_sedov import CONFIG_MIXED
+from repro.configs.base import (
+    AggregationConfig, HydroConfig, resolve_family_option,
+)
+from repro.configs.gravity import CONFIG_SMALL
+from repro.core import (
+    AMRSedovScenario, FaultInjector, FaultSpec, GravityScenario,
+    StrategyRunner, TaskFailedError, UniformSedovScenario,
+)
+from repro.core.aggregation import (
+    AggregationExecutor, BucketCostModel, s2_width_candidates,
+)
+from repro.core.faults import NonFiniteStateError
+
+WM = 10 ** 9
+ROUTES = ("s2", "s3", "fused")
+UCFG = HydroConfig(subgrid=8, ghost=3, levels=1)
+GCFG = CONFIG_SMALL
+
+
+def _mixed_runner(scenario, family_strategies, *, n_exec=2, **kw):
+    agg = AggregationConfig(strategy="mixed", n_executors=n_exec,
+                            max_aggregated=16, launch_watermark=WM,
+                            family_strategies=family_strategies, **kw)
+    return StrategyRunner(scenario, agg)
+
+
+def _assert_matches(out, ref, *, exact):
+    outs = out if isinstance(out, tuple) else (out,)
+    refs = ref if isinstance(ref, tuple) else (ref,)
+    for o, r in zip(outs, refs):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+        else:
+            scale = float(np.max(np.abs(np.asarray(r))))
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       atol=1e-6 * scale, rtol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def uniform():
+    from repro.hydro.state import sedov_init
+    from repro.hydro.stepper import courant_dt
+    st_ = sedov_init(UCFG)
+    dt = courant_dt(st_.u, UCFG)
+    ref = StrategyRunner(UniformSedovScenario(UCFG),
+                         AggregationConfig(strategy="fused")).rk3_step(
+        st_.u, dt)
+    return st_.u, dt, ref
+
+
+@pytest.fixture(scope="module")
+def amr_mixed():
+    from repro.hydro.state import amr_sedov_init
+    from repro.hydro.stepper import amr_courant_dt
+    st_ = amr_sedov_init(CONFIG_MIXED)
+    dt = amr_courant_dt(st_.uc, st_.uf, CONFIG_MIXED)
+    ref = StrategyRunner(AMRSedovScenario(CONFIG_MIXED),
+                         AggregationConfig(strategy="fused")).rk3_step(
+        (st_.uc, st_.uf), dt)
+    return (st_.uc, st_.uf), dt, ref
+
+
+@pytest.fixture(scope="module")
+def grav():
+    from repro.hydro.state import sedov_init
+    from repro.hydro.stepper import courant_dt
+    st_ = sedov_init(GCFG.hydro)
+    dt = courant_dt(st_.u, GCFG.hydro)
+    ref = StrategyRunner(GravityScenario(GCFG),
+                         AggregationConfig(strategy="fused")).rk3_step(
+        st_.u, dt)
+    return st_.u, dt, ref
+
+
+# ---------------------------------------------------------------------------
+# the product sweep: every per-family assignment == the fused reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("route", ROUTES)
+def test_mixed_uniform_single_family_product(uniform, route):
+    u, dt, ref = uniform
+    r = _mixed_runner(UniformSedovScenario(UCFG), {"hydro_rhs": route})
+    out = r.rk3_step(u, dt)
+    _assert_matches(out, ref, exact=True)
+
+
+@pytest.mark.parametrize("rc,rf", list(itertools.product(ROUTES, ROUTES)))
+def test_mixed_amr_two_family_product(amr_mixed, rc, rf):
+    """CONFIG_MIXED: 16^3 coarse + 8^3 fine are distinct families; every
+    (coarse route, fine route) pair is bit-identical to the per-level
+    fused reference."""
+    state, dt, ref = amr_mixed
+    r = _mixed_runner(AMRSedovScenario(CONFIG_MIXED),
+                      {"hydro_rhs_s16": rc, "hydro_rhs_s8": rf})
+    out = r.rk3_step(state, dt)
+    _assert_matches(out, ref, exact=True)
+
+
+@pytest.mark.parametrize("rh,rg", list(itertools.product(ROUTES, ROUTES)))
+def test_mixed_gravity_two_family_product(grav, rh, rg):
+    """Hydro and gravity route independently through one runner.  Exact
+    everywhere except s2-routed gravity (the documented scatter-program
+    ulp caveat, same tolerance as test_gravity_s2_matches_reference)."""
+    u, dt, ref = grav
+    r = _mixed_runner(GravityScenario(GCFG),
+                      {"hydro_rhs": rh, "gravity": rg})
+    out = r.rk3_step(u, dt)
+    _assert_matches(out, ref, exact=rg != "s2")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random assignments / wildcards / interleavings
+# ---------------------------------------------------------------------------
+
+_GRAV_CACHE: list = []
+
+
+def _grav_data():
+    """Module-level lazy twin of the ``grav`` fixture: the hypothesis
+    fallback shim (tests/conftest.py) rewrites @given tests to zero-arg
+    callables, so the property test cannot take pytest fixtures."""
+    if not _GRAV_CACHE:
+        from repro.hydro.state import sedov_init
+        from repro.hydro.stepper import courant_dt
+        st_ = sedov_init(GCFG.hydro)
+        dt = courant_dt(st_.u, GCFG.hydro)
+        ref = StrategyRunner(GravityScenario(GCFG),
+                             AggregationConfig(strategy="fused")).rk3_step(
+            st_.u, dt)
+        _GRAV_CACHE.append((st_.u, dt, ref))
+    return _GRAV_CACHE[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.integers(0, 3), b=st.integers(0, 3),
+       wild=st.integers(0, 1), n_exec=st.integers(1, 3))
+def test_mixed_random_assignments_preserve_identity(a, b, wild, n_exec):
+    """Random family_strategies dicts — exact keys or the "*" wildcard,
+    including "auto" entries — preserve the reference identity under
+    random executor-pool sizes (which vary the two families' dispatch
+    interleaving)."""
+    u, dt, ref = _grav_data()
+    routes = ROUTES + ("auto",)
+    rh, rg = routes[a], routes[b]
+    fam = ({"hydro_rhs": rh, "*": rg} if wild
+           else {"hydro_rhs": rh, "gravity": rg})
+    r = _mixed_runner(GravityScenario(GCFG), fam, n_exec=n_exec)
+    out = r.rk3_step(u, dt)
+    # unmeasured "auto" falls back to s3 (exact); only explicit s2-routed
+    # gravity carries the scatter-program ulp caveat
+    _assert_matches(out, ref, exact=rg != "s2")
+
+
+# ---------------------------------------------------------------------------
+# observability: resolved routes + cost-model justification
+# ---------------------------------------------------------------------------
+
+def test_mixed_explicit_routes_recorded(grav):
+    u, dt, _ = grav
+    r = _mixed_runner(GravityScenario(GCFG),
+                      {"hydro_rhs": "s2", "gravity": "fused"})
+    r.rk3_step(u, dt)
+    sel = {k: v.get("selected_strategy")
+           for k, v in r.stats["regions"].items()}
+    assert sel["hydro_rhs[5x14x14x14,scalar]"] == "s2"
+    assert sel["gravity[5x14x14x14,scalar]"] == "fused"
+    # s2-routed family publishes launch counts + width histogram (stats
+    # parity: the same surface the executor gives aggregated families)
+    s2_stats = r.stats["regions"]["hydro_rhs[5x14x14x14,scalar]"]
+    n = GCFG.hydro.n_subgrids
+    assert s2_stats["submitted"] == 3 * n
+    assert s2_stats["launches"] == 3 * n          # width 1 without model
+    assert s2_stats["aggregated_hist"] == {1: 3 * n}
+
+
+def test_mixed_auto_selection_measured(uniform):
+    """auto + cost_model: warmup measures the family's s2 / s3 / fused
+    wall time, ``select_strategy`` routes to the measured minimum, and
+    the decision (with its justification) lands in the region stats."""
+    u, dt, ref = uniform
+    agg = AggregationConfig(strategy="mixed", n_executors=2,
+                            max_aggregated=UCFG.n_subgrids,
+                            launch_watermark=WM, cost_model=True,
+                            cost_samples=1)
+    r = StrategyRunner(UniformSedovScenario(UCFG), agg)
+    r.warmup(wave_only=True)
+    out = r.rk3_step(u, dt)
+    _assert_matches(out, ref, exact=True)
+    (stats,) = [v for k, v in r.stats["regions"].items()
+                if k.startswith("hydro_rhs")]
+    costs = stats["strategy_costs"]
+    assert stats["selected_strategy"] in ROUTES
+    assert set(costs) >= {"s2", "s3", "fused", "s2_width"}
+    assert all(v > 0 for v in costs.values())
+    assert costs[stats["selected_strategy"]] == min(
+        costs[p] for p in ROUTES if p in costs)
+
+
+def test_mixed_rejects_unknown_family_and_route():
+    sc = UniformSedovScenario(UCFG)
+    with pytest.raises(ValueError, match="names no kernel"):
+        _mixed_runner(sc, {"not_a_family": "s3"})
+    with pytest.raises(ValueError, match="family_strategies"):
+        _mixed_runner(sc, {"hydro_rhs": "warp"})
+
+
+# ---------------------------------------------------------------------------
+# guard="finite" x routing (DESIGN.md §11 x §12)
+# ---------------------------------------------------------------------------
+
+def _inject(kernel):
+    return FaultInjector([FaultSpec(site="payload", kernel=kernel, task=0,
+                                    mode="nan", times=1)], seed=0)
+
+
+@pytest.mark.parametrize("kernel,route,other", [
+    ("hydro_rhs", "s3", "s2"),
+    ("gravity", "s3", "fused"),
+])
+def test_mixed_guard_s3_routed_fault_bisected(grav, kernel, route, other):
+    """A poisoned task in an s3-routed family keeps the executor's full
+    containment: bisection isolates the culprit and the failure surfaces
+    as TaskFailedError, even while the OTHER family routes elsewhere."""
+    u, dt, _ = grav
+    fam = {kernel: route,
+           ("gravity" if kernel == "hydro_rhs" else "hydro_rhs"): other}
+    agg = AggregationConfig(strategy="mixed", n_executors=2,
+                            max_aggregated=16, launch_watermark=WM,
+                            family_strategies=fam, guard="finite")
+    r = StrategyRunner(GravityScenario(GCFG), agg,
+                       fault_injector=_inject(kernel))
+    with pytest.raises(TaskFailedError):
+        r.rk3_step(u, dt)
+
+
+@pytest.mark.parametrize("kernel,route", [
+    ("hydro_rhs", "s2"),
+    ("hydro_rhs", "fused"),
+    ("gravity", "s2"),
+    ("gravity", "fused"),
+])
+def test_mixed_guard_nonexecutor_route_tripwire(grav, kernel, route):
+    """s2/fused-routed families have no bucket structure to bisect: the
+    strategy's own audit trips on the injected NaN, naming the family and
+    its route."""
+    u, dt, _ = grav
+    fam = {"hydro_rhs": "s3", "gravity": "s3"}
+    fam[kernel] = route
+    agg = AggregationConfig(strategy="mixed", n_executors=2,
+                            max_aggregated=16, launch_watermark=WM,
+                            family_strategies=fam, guard="finite")
+    r = StrategyRunner(GravityScenario(GCFG), agg,
+                       fault_injector=_inject(kernel))
+    with pytest.raises(NonFiniteStateError) as ei:
+        r.rk3_step(u, dt)
+    assert kernel in str(ei.value) and route in str(ei.value)
+
+
+def test_mixed_unguarded_faults_still_poison(grav):
+    """Without the guard, the injected NaN flows into the result (faults
+    are payload corruption, not exceptions) — the tripwire is what turns
+    it into containment."""
+    u, dt, _ = grav
+    agg = AggregationConfig(strategy="mixed", n_executors=2,
+                            max_aggregated=16, launch_watermark=WM,
+                            family_strategies={"hydro_rhs": "s2",
+                                               "gravity": "s3"})
+    r = StrategyRunner(GravityScenario(GCFG), agg,
+                       fault_injector=_inject("hydro_rhs"))
+    out = r.rk3_step(u, dt)
+    assert not bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# the §12 substrate: multi-path cost model + per-family flush policy
+# ---------------------------------------------------------------------------
+
+def test_cost_model_paths_are_independent():
+    m = BucketCostModel()
+    m.record(8, 1e-3)                       # default path: s3
+    m.record(1, 2e-4, path="s2")
+    m.record(4, 5e-4, path="s2")
+    m.record(8, 3e-3, path="fused")
+    assert m.measured() and m.measured("s2") and m.measured("fused")
+    assert set(m.paths()) == {"s3", "s2", "fused"}
+    assert m.buckets("s2") == (1, 4)
+    tables = m.as_stats_paths()
+    assert tables["s3"] == {8: 1.0} and tables["s2"] == {1: 0.2, 4: 0.5}
+    m.clear()
+    assert not m.measured() and not m.measured("s2")
+
+
+def test_predict_s2_wave_picks_cheapest_width():
+    m = BucketCostModel()
+    assert m.predict_s2_wave(8) is None     # unmeasured
+    m.record(1, 1e-3, path="s2")
+    m.record(4, 1.5e-3, path="s2")
+    # wave 10 @ width 4: 2*1.5ms + 2*1ms = 5ms; @ width 1: 10ms
+    w, t = m.predict_s2_wave(10)
+    assert w == 4
+    np.testing.assert_allclose(t, 5e-3)
+    # make width 1 cheaper than coalescing: width 1 must win
+    m2 = BucketCostModel()
+    m2.record(1, 1e-4, path="s2")
+    m2.record(4, 9e-4, path="s2")
+    assert m2.predict_s2_wave(8)[0] == 1
+
+
+def test_s2_width_candidates():
+    assert s2_width_candidates(1) == (1,)
+    assert s2_width_candidates(2) == (1, 2)
+    assert s2_width_candidates(8) == (1, 2, 8)
+    assert s2_width_candidates(11) == (1, 2, 8)
+    assert s2_width_candidates(64) == (1, 2, 64)
+
+
+def test_resolve_family_option():
+    table = {"hydro_rhs": "s2", "*": "fused"}
+    assert resolve_family_option(table, "hydro_rhs", "s3") == "s2"
+    assert resolve_family_option(table, "hydro_rhs+epi", "s3") == "s2"
+    assert resolve_family_option(table, "gravity", "s3") == "fused"
+    assert resolve_family_option({"gravity": "s3"}, "other", "s3") == "s3"
+    assert resolve_family_option("cost", "anything", "eager") == "cost"
+    assert resolve_family_option(None, "anything", "eager") == "eager"
+
+
+def test_per_family_flush_policy_resolved_and_traced():
+    """A dict-valued flush_policy routes each family to its own drain
+    policy; non-eager families record their decision trace."""
+    cfg = AggregationConfig(max_aggregated=8, launch_watermark=1,
+                            flush_policy={"k": "watermark", "*": "eager"})
+    exe = AggregationExecutor(None, cfg)
+    exe.register("k", lambda x: x * 2.0)
+    exe.register("j", lambda x: x + 1.0)
+    parents = (jnp.arange(4, dtype=jnp.float32).reshape(4, 1),)
+    for kernel in ("k", "j"):
+        exe.submit_range(parents, 0, 4, kernel=kernel)
+    exe.flush()
+    assert exe.stats["flush_policy"] == {"k": "watermark", "*": "eager"}
+    regions = exe.stats["regions"]
+    traced = {k: v.get("flush_decisions") for k, v in regions.items()}
+    k_key = [k for k in regions if k.startswith("k[")][0]
+    j_key = [k for k in regions if k.startswith("j[")][0]
+    assert traced[k_key] is not None and traced[k_key]["policy"] == \
+        "watermark"
+    assert traced[j_key] is None            # eager families don't consult
+
+    with pytest.raises(ValueError):
+        AggregationExecutor(None, AggregationConfig(
+            flush_policy={"k": "bogus"}))
