@@ -120,6 +120,30 @@ def flush_decision_trace(runner) -> dict:
             if v.get("flush_decisions")}
 
 
+def warm_start(runner) -> bool:
+    """Did any of the runner's families restore tuned state from the
+    persistent tune store (DESIGN.md §13)?"""
+    exe = getattr(runner, "executor", None)
+    return bool(exe.stats.get("warm_start")) if exe is not None else False
+
+
+def region_tuned_by(runner) -> dict:
+    """Per-family provenance of the current tuning: "store" (loaded from
+    the persistent tune store), "prior" (analytical roofline seed),
+    "measured" (live cost-model retune) or "launches" (launch-count
+    retune).  Absent families have never been tuned."""
+    return {k: v["tuned_by"] for k, v in _regions(runner).items()
+            if v.get("tuned_by")}
+
+
+def region_measurement_launches(runner) -> dict:
+    """Per-family kernel launches spent on stopwatch measurement (bucket
+    timing, s2/fused probes, chunk sweeps).  A warm-started process must
+    report 0 everywhere — the §13 acceptance counter."""
+    return {k: int(v.get("measurement_launches", 0))
+            for k, v in _regions(runner).items()}
+
+
 def hist_deltas(now: dict, warm: dict) -> dict:
     """Per-family bucket histograms over the timed region only."""
     out = {}

@@ -36,12 +36,15 @@ ROW_KEYS = ("config", "ms_per_step", "launches_per_step")
 # optional per-row observability fields (launch_overhead ladder sweep /
 # DESIGN.md §10 measured-tuning rows): validated for shape whenever
 # present; *_ladder* rows require ladder+hists, *cost* rows additionally
-# require the measured cost table and the configured flush policy
+# require the measured cost table and the configured flush policy, *store*
+# rows the §13 warm-start observables (warm_start / tuned_by /
+# measurement_launches)
 OPTIONAL_ROW_KEYS = ("ms_per_step_samples", "ladder", "region_hists",
                      "cost_model", "cost_model_paths", "flush_policy",
                      "guard", "faults", "guard_overhead_pct",
                      "guard_overhead_ratios", "strategy",
-                     "family_strategies", "selection", "flush_decisions")
+                     "family_strategies", "selection", "flush_decisions",
+                     "warm_start", "tuned_by", "measurement_launches")
 
 FLUSH_POLICIES = ("eager", "watermark", "cost")
 GUARD_POLICIES = ("off", "finite")
@@ -52,6 +55,10 @@ STRATEGIES = ("s1", "s2", "s3", "s2+s3", "fused", "mixed")
 AGGREGATED_MIN_STRATEGIES = ("s3", "s2+s3", "mixed")
 FAMILY_ROUTES = ("s2", "s3", "fused")
 COST_PATHS = ("s2", "s3", "fused")
+# provenance of a family's tuning (DESIGN.md §13): restored from the
+# persistent store, seeded by the analytical roofline prior, measured
+# live, or launch-count-retuned without a cost model
+TUNED_BY = ("store", "prior", "measured", "launches")
 
 
 def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
@@ -161,6 +168,22 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
         problems.append(f"{path}: rows[{i}] 'selection' must map family -> "
                         f"{{selected_strategy in {FAMILY_ROUTES}, "
                         f"strategy_costs}}")
+    warm = row.get("warm_start")
+    if warm is not None and not isinstance(warm, bool):
+        problems.append(f"{path}: rows[{i}] 'warm_start' must be a bool, "
+                        f"got {warm!r}")
+    tuned_by = row.get("tuned_by")
+    if tuned_by is not None and not (
+            isinstance(tuned_by, dict) and tuned_by
+            and all(v in TUNED_BY for v in tuned_by.values())):
+        problems.append(f"{path}: rows[{i}] 'tuned_by' must map family -> "
+                        f"one of {TUNED_BY}")
+    meas = row.get("measurement_launches")
+    if meas is not None and not (
+            isinstance(meas, dict)
+            and all(isinstance(c, int) and c >= 0 for c in meas.values())):
+        problems.append(f"{path}: rows[{i}] 'measurement_launches' must "
+                        f"map family -> non-negative launch count")
     tag = str(row.get("config", ""))
     hists_any = hists if hists is not None \
         else row.get("bucket_hist_by_family")
@@ -180,6 +203,12 @@ def _check_optional_row(path: str, i: int, row: dict) -> List[str]:
         problems.append(f"{path}: rows[{i}] is a mixed row but lacks "
                         f"'family_strategies'/'selection' (the per-family "
                         f"assignment and the measured justification)")
+    if "store" in tag and (warm is None or tuned_by is None
+                           or meas is None):
+        problems.append(f"{path}: rows[{i}] is a warm-start store row but "
+                        f"lacks one of 'warm_start'/'tuned_by'/"
+                        f"'measurement_launches' (the DESIGN.md §13 "
+                        f"cold-vs-warm observables)")
     if "policy" in tag and decisions is None:
         problems.append(f"{path}: rows[{i}] is an adaptive-drain policy "
                         f"row but lacks 'flush_decisions' (the decision "

@@ -31,11 +31,18 @@ table per drain opportunity (its decision trace rides in the row as
 executor measures every family's s2 / s3 / fused wall time during warmup
 and routes each family to its measured minimum — the resolved assignment
 (``family_strategies``), the per-family verdicts (``selection``), and the
-multi-path cost tables (``cost_model_paths``) ride in the row.  All wall
-times are MEDIANS of per-repeat means (raw samples ride along in the
-JSON).
+multi-path cost tables (``cost_model_paths``) ride in the row.
+``s3_cost_store`` (emitted only with ``--store DIR``) is the DESIGN.md §13
+warm-start row: identical knobs to ``s3_cost_auto`` plus a persistent
+TuneStore — a COLD run measures, persists its tuning and reports
+``warm_start: false``; a SECOND process against the same directory
+restores the ladder / cost tables / chunk choice from disk and must
+report ``warm_start: true`` with ``measurement_launches == 0`` (the CI
+cold-vs-warm gate).  All wall times are MEDIANS of per-repeat means (raw
+samples ride along in the JSON).
 
   PYTHONPATH=src python benchmarks/launch_overhead.py [--full] [--steps N]
+                                                      [--store DIR]
 
 Writes BENCH_launch_overhead.json at the repo root.
 """
@@ -52,7 +59,8 @@ import jax
 import jax.numpy as jnp
 from bench_util import WM, flush_decision_trace, hist_deltas, \
     paired_overhead_pct, region_cost_models, region_cost_paths, \
-    region_hists, region_ladders, region_selection, time_per_step
+    region_hists, region_ladders, region_measurement_launches, \
+    region_selection, region_tuned_by, time_per_step, warm_start
 
 from repro.configs.base import AggregationConfig, HydroConfig
 from repro.core import StrategyRunner, UniformSedovScenario
@@ -138,7 +146,8 @@ class SeedS3Runner:
         return (1.0 / 3.0) * u + (2.0 / 3.0) * (u2 + dt * l2)
 
 
-def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
+def run(levels: int = 2, steps: int = 3, repeats: int = 3,
+        store: Optional[str] = None) -> List[dict]:
     cfg = HydroConfig(subgrid=8, ghost=3, levels=levels)
     st = sedov_init(cfg)
     dt = courant_dt(st.u, cfg)
@@ -149,7 +158,8 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                strategy=None, samples=None, ladder=None, hists=None,
                cost=None, cost_paths=None, flush_policy=None, guard=None,
                faults=None, family_strategies=None, selection=None,
-               flush_decisions=None):
+               flush_decisions=None, warm=None, tuned_by=None,
+               measurement_launches=None):
         row = {
             "config": tag, "strategy": strategy, "n_subgrids": n,
             "ms_per_step": round(sec * 1e3, 3),
@@ -181,6 +191,12 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
             row["selection"] = selection
         if flush_decisions is not None:
             row["flush_decisions"] = flush_decisions
+        if warm is not None:
+            row["warm_start"] = warm
+        if tuned_by is not None:
+            row["tuned_by"] = tuned_by
+        if measurement_launches is not None:
+            row["measurement_launches"] = measurement_launches
         rows.append(row)
         print(f"  {tag:24s} {row['ms_per_step']:9.2f} ms/step  "
               f"staging {row['staging_ms_per_step']} ms")
@@ -255,6 +271,19 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                           autotune=True, inner_chunk="auto",
                           fuse_epilogue=True, cost_model=True,
                           flush_policy="cost")))
+    # the DESIGN.md §13 warm-start row (only with --store): s3_cost_auto
+    # knobs plus a persistent TuneStore and the roofline prior.  On a cold
+    # store this row measures, persists its tuning and reports
+    # warm_start=false; re-running the benchmark against the SAME store
+    # directory restores everything from disk — the row then must report
+    # warm_start=true and measurement_launches == 0 (the CI gate).
+    if store is not None:
+        agg_rows.append(("s3_cost_store", "s3", 1,
+                         dict(max_aggregated=n, launch_watermark=WM,
+                              autotune=True, inner_chunk="auto",
+                              fuse_epilogue=True, cost_model=True,
+                              flush_policy="cost", tune_store=store,
+                              prior="roofline")))
     # the DESIGN.md §11 guard row: identical knobs to s3_cost_auto plus
     # guard="finite" — the untripped audit (ONE scalar all-finite check per
     # drained launch).  The acceptance bar is <= 5% overhead vs the
@@ -318,6 +347,12 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                            for fam, s in r.executor.stats["regions"].items()
                            if "faults" in s}
         mixed = strat == "mixed"
+        stored = "tune_store" in knobs
+        if stored:
+            # Persist whatever this process tuned so the NEXT process warm
+            # starts.  On a warm run the regions were restored (not
+            # measured), so this is a no-op merge of identical entries.
+            r.save_tuning()
         record(tag, sec, launches, staging_s / repeats,
                r.pool.total_dispatch_s / repeats, strategy=strat,
                samples=samples,
@@ -334,7 +369,11 @@ def run(levels: int = 2, steps: int = 3, repeats: int = 3) -> List[dict]:
                                   if agg.family_strategies else {"*": "auto"})
                if mixed else None,
                selection=(region_selection(r) or None) if mixed else None,
-               flush_decisions=(flush_decision_trace(r) or None))
+               flush_decisions=(flush_decision_trace(r) or None),
+               warm=warm_start(r) if stored else None,
+               tuned_by=(region_tuned_by(r) or None) if stored else None,
+               measurement_launches=(region_measurement_launches(r)
+                                     if stored else None))
         if tag in ("s3_cost_auto", "s3_cost_auto_guard"):
             runners[tag] = r
     # guarded-vs-unguarded overhead (the <= 5% acceptance metric).  The
@@ -407,6 +446,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=3)
     ap.add_argument("--repeats", type=int, default=3,
                     help="best-of-N timing (filters scheduler noise)")
+    ap.add_argument("--store", default=os.environ.get("REPRO_TUNE_STORE")
+                    or None, metavar="DIR",
+                    help="persistent tune-store directory: adds the "
+                         "s3_cost_store warm-start row (cold run measures "
+                         "and persists; a second run against the same DIR "
+                         "must report measurement_launches == 0)")
     args = ap.parse_args()
     if args.smoke:
         args.steps, args.repeats = 1, 1
@@ -415,7 +460,8 @@ def main() -> None:
     levels = 1 if args.smoke else 3 if args.full else 2
     print(f"launch_overhead: Sedov, {8 ** 3 * (2 ** levels) ** 3} cells, "
           f"backend={jax.default_backend()}")
-    rows = run(levels=levels, steps=args.steps, repeats=args.repeats)
+    rows = run(levels=levels, steps=args.steps, repeats=args.repeats,
+               store=args.store)
     payload = {
         "benchmark": "launch_overhead",
         "backend": jax.default_backend(),

@@ -241,6 +241,19 @@ class AggregationConfig:
     max_bucket_retries: int = 2
     retry_backoff_s: float = 0.0
     quarantine_threshold: int = 2
+    # Persistent warm start (DESIGN.md §13): ``tune_store`` roots the
+    # on-disk TuneStore (a directory path or TuneStore instance; None
+    # consults the REPRO_TUNE_STORE env var, unset = cold start).  A
+    # populated store lets ``warmup`` LOAD each region's tuned state
+    # (ladder, inner chunk, cost tables, strategy selection) instead of
+    # measuring it, and points JAX's persistent compilation cache at the
+    # store dir so bucket compiles become disk hits; ``retune()`` writes
+    # refreshed measurements back.  ``prior="roofline"`` seeds regions
+    # the store cannot warm (first contact) with analytical
+    # bytes-moved/FLOPs estimates, so ``derive_ladder`` has a sane
+    # wall-time objective before the first measured wave.
+    tune_store: object = None         # path | TuneStore | None
+    prior: str = "off"                # "off" | "roofline"
 
     def bucket_sizes(self) -> Tuple[int, ...]:
         if self.buckets:

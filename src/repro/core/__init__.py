@@ -15,6 +15,9 @@
                     any scenario under any strategy — including
                     cross-solver aggregation of several kernel families
                     through one executor
+* ``tunestore``   — persistent warm start (DESIGN.md §13): the on-disk
+                    TuneStore of measured tuning state + the analytical
+                    RooflinePrior that seeds first-contact ladders
 """
 from repro.core.aggregation import (
     AggregationExecutor, BucketCostModel, RangeFuture, SlotView, TaskFuture,
@@ -36,6 +39,7 @@ from repro.core.strategies import (
     AMRStrategyRunner, HydroStrategyRunner, RunContext, Strategy,
     StrategyRunner, available_strategies, register_strategy,
 )
+from repro.core.tunestore import RooflinePrior, TuneStore, TuneStoreWarning
 
 __all__ = [
     "AggregationExecutor", "BucketCostModel", "RangeFuture", "SlotView",
@@ -51,4 +55,5 @@ __all__ = [
     "Strategy", "RunContext", "StrategyRunner",
     "available_strategies", "register_strategy",
     "AMRStrategyRunner", "HydroStrategyRunner", "xla_task_body",
+    "TuneStore", "TuneStoreWarning", "RooflinePrior",
 ]

@@ -46,6 +46,7 @@ from __future__ import annotations
 import bisect
 import statistics
 import time
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from types import MappingProxyType
@@ -55,7 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import AggregationConfig, resolve_family_option
+from repro.configs.base import (
+    AggregationConfig, resolve_family_option, validate_ladder,
+)
 from repro.core.buffers import DEFAULT_POOL, BufferPool, SlotRing
 from repro.core.executor import ExecutorPool
 from repro.core.faults import (
@@ -63,6 +66,7 @@ from repro.core.faults import (
     RegionFaultError, TaskFailedError, all_finite, all_finite_async,
     poison_slots,
 )
+from repro.core.tunestore import RooflinePrior, TuneStore, TuneStoreWarning
 
 
 # inner-chunk auto-tune memo: (backend, body id, bucket, task specs) ->
@@ -501,15 +505,27 @@ class BucketCostModel:
     the one-launch whole-wave body keyed by wave size — so
     ``select_strategy`` compares all three strategies' measured wall
     times in one currency.
+
+    Priors (DESIGN.md §13): ``seed_prior`` installs an ANALYTICAL
+    estimate (the tunestore's :class:`RooflinePrior`) in a separate
+    per-path table.  Measured samples always win: ``predict`` only
+    consults a path's priors when that path has zero real samples, and
+    counts every such consultation in ``prior_hits`` (the observability
+    hook for "this decision ran on arithmetic, not a stopwatch").
+    ``sources()`` labels every known bucket ``"measured" | "store" |
+    "prior"`` so the stats surface can show where a table came from.
     """
 
-    __slots__ = ("samples", "_paths")
+    __slots__ = ("samples", "_paths", "priors", "_sources", "prior_hits")
 
     def __init__(self):
         self.samples: Dict[int, List[float]] = {}
         # path -> {bucket/width: raw samples}; "s3" aliases ``samples``
         # so the historical single-table surface keeps working unchanged
         self._paths: Dict[str, Dict[int, List[float]]] = {"s3": self.samples}
+        self.priors: Dict[str, Dict[int, float]] = {}
+        self._sources: Dict[Tuple[str, int], str] = {}
+        self.prior_hits = 0
 
     def _table(self, path: str) -> Dict[int, List[float]]:
         t = self._paths.get(path)
@@ -517,8 +533,17 @@ class BucketCostModel:
             t = self._paths[path] = {}
         return t
 
-    def record(self, bucket: int, seconds: float, path: str = "s3") -> None:
+    def record(self, bucket: int, seconds: float, path: str = "s3",
+               source: str = "measured") -> None:
         self._table(path).setdefault(int(bucket), []).append(float(seconds))
+        self._sources[(path, int(bucket))] = source
+
+    def seed_prior(self, bucket: int, seconds: float,
+                   path: str = "s3") -> None:
+        """Install an analytical estimate for one bucket.  Lives beside
+        the sample tables, never in them — a prior must not suppress the
+        real measurement of its bucket (``time`` stays None)."""
+        self.priors.setdefault(path, {})[int(bucket)] = float(seconds)
 
     def clear(self) -> None:
         """Drop every sample on every path (the measurements' premise
@@ -526,9 +551,35 @@ class BucketCostModel:
         timings describe programs that no longer exist)."""
         for table in self._paths.values():
             table.clear()
+        self.priors.clear()
+        self._sources.clear()
+
+    def clear_priors(self) -> None:
+        """Retire the analytical seeds (retune just measured for real —
+        the §13 'fully replaced by measurements' contract)."""
+        self.priors.clear()
 
     def measured(self, path: str = "s3") -> bool:
         return bool(self._paths.get(path))
+
+    def seeded(self, path: str = "s3") -> bool:
+        return bool(self.priors.get(path))
+
+    def has_data(self, path: str = "s3") -> bool:
+        """Can ``predict`` answer for this path (measured or seeded)?"""
+        return self.measured(path) or self.seeded(path)
+
+    def sources(self) -> Dict[str, Dict[int, str]]:
+        """{path: {bucket: "measured" | "store" | "prior"}} — where each
+        known bucket's number came from (priors shadowed by samples)."""
+        out: Dict[str, Dict[int, str]] = {}
+        for path, prior in self.priors.items():
+            for b in prior:
+                out.setdefault(path, {})[b] = "prior"
+        for (path, b), src in self._sources.items():
+            if self._paths.get(path, {}).get(b):
+                out.setdefault(path, {})[b] = src
+        return out
 
     def paths(self) -> Tuple[str, ...]:
         """The execution paths with at least one measurement."""
@@ -541,27 +592,42 @@ class BucketCostModel:
         s = self._paths.get(path, {}).get(bucket)
         return statistics.median(s) if s else None
 
+    @staticmethod
+    def _interp(bs: Sequence[int], val: Callable[[int], float],
+                bucket: int) -> float:
+        """Piecewise-linear table extension shared by the measured and
+        prior paths: clamp below the smallest entry, interpolate inside,
+        extrapolate above with the last segment's slope (floored)."""
+        if bucket <= bs[0]:
+            return val(bs[0])
+        if bucket >= bs[-1]:
+            hi = val(bs[-1])
+            if len(bs) == 1:
+                return hi * bucket / bs[-1]
+            lo = val(bs[-2])
+            slope = (hi - lo) / (bs[-1] - bs[-2])
+            return max(hi, hi + slope * (bucket - bs[-1]))
+        i = bisect.bisect_left(bs, bucket)
+        b0, b1 = bs[i - 1], bs[i]
+        t0, t1 = val(b0), val(b1)
+        return t0 + (t1 - t0) * (bucket - b0) / (b1 - b0)
+
     def predict(self, bucket: int, path: str = "s3") -> float:
         t = self.time(bucket, path)
         if t is not None:
             return t
         bs = self.buckets(path)
-        if not bs:
-            raise ValueError("cost model has no measurements — check "
-                             "measured() before predicting")
-        if bucket <= bs[0]:
-            return self.time(bs[0], path)
-        if bucket >= bs[-1]:
-            hi = self.time(bs[-1], path)
-            if len(bs) == 1:
-                return hi * bucket / bs[-1]
-            lo = self.time(bs[-2], path)
-            slope = (hi - lo) / (bs[-1] - bs[-2])
-            return max(hi, hi + slope * (bucket - bs[-1]))
-        i = bisect.bisect_left(bs, bucket)
-        b0, b1 = bs[i - 1], bs[i]
-        t0, t1 = self.time(b0, path), self.time(b1, path)
-        return t0 + (t1 - t0) * (bucket - b0) / (b1 - b0)
+        if bs:
+            return self._interp(bs, lambda b: self.time(b, path), bucket)
+        prior = self.priors.get(path)
+        if prior:
+            # analytical fallback — only ever consulted for a path with
+            # ZERO real samples, so one measurement retires a whole table
+            self.prior_hits += 1
+            pbs = tuple(sorted(prior))
+            return self._interp(pbs, prior.__getitem__, bucket)
+        raise ValueError("cost model has no measurements or priors — "
+                         "check has_data() before predicting")
 
     def predict_seq(self, buckets: Sequence[int], path: str = "s3") -> float:
         """Predicted wall time of one greedy drain (launch sequence)."""
@@ -573,7 +639,7 @@ class BucketCostModel:
         width-w launch covers w tasks, the remainder falls back to the
         width-1 program.  None before any "s2" measurement (or when a
         remainder would need an unmeasured width-1 program)."""
-        ws = self.buckets("s2")
+        ws = self.buckets("s2") or tuple(sorted(self.priors.get("s2", ())))
         if not ws:
             return None
         best = None
@@ -747,7 +813,9 @@ def derive_ladder(queue_hist: Mapping[int, int], cap: int, budget: int,
     # greedy cover): drop them before they reach the objective
     queue_hist = {k: c for k, c in queue_hist.items() if k > 0}
     candidates = ladder_candidates(queue_hist, cap)
-    use_model = cost_model is not None and cost_model.measured()
+    # prior-seeded models qualify (DESIGN.md §13): an analytical table is
+    # still a wall-time objective, which is the whole point of seeding
+    use_model = cost_model is not None and cost_model.has_data()
 
     def cost(ladder):
         # candidate buckets never exceed the cap, so the greedy cover of
@@ -864,6 +932,10 @@ class _Region:
         self.reset_compiled()
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
                       "queue_hist": {}, "ladder": list(buckets),
+                      # warm-start observability (DESIGN.md §13): launches
+                      # spent on stopwatch measurement, and cost-model
+                      # predictions answered from the analytical prior
+                      "measurement_launches": 0, "prior_hits": 0,
                       "faults": {"trips": 0, "bisection_launches": 0,
                                  "failed_tasks": 0, "quarantined": [],
                                  "retries": 0, "compile_failures": 0,
@@ -1014,6 +1086,19 @@ class AggregationExecutor:
         self._cost_on = bool(getattr(self.config, "cost_model", False))
         self._cost_samples = max(1, int(getattr(self.config,
                                                 "cost_samples", 3)))
+        # warm-start subsystem (DESIGN.md §13): the persistent tune store
+        # (None -> cold start unless REPRO_TUNE_STORE points somewhere)
+        # and the analytical prior for first-contact ladder derivation
+        self._store = TuneStore.open(getattr(self.config, "tune_store",
+                                             None))
+        prior_mode = getattr(self.config, "prior", "off")
+        if prior_mode not in ("off", "roofline"):
+            raise ValueError(f"unknown prior mode {prior_mode!r} — valid "
+                             f"modes: off, roofline")
+        self._prior: Optional[RooflinePrior] = None
+        self._prior_on = prior_mode == "roofline"
+        if self._store is not None:
+            self._store.enable_compilation_cache()
         # blast-radius containment (DESIGN.md §11)
         self._guard = getattr(self.config, "guard", "off")
         if self._guard not in ("off", "finite"):
@@ -1040,6 +1125,7 @@ class AggregationExecutor:
         # live under "regions" (the multi-signature observability surface)
         self.stats = {"submitted": 0, "launches": 0, "aggregated_hist": {},
                       "staging_s": 0.0, "regions": {},
+                      "warm_start": False,   # any region restored from store
                       "flush_policy": (dict(self._flush_policy)
                                        if isinstance(self._flush_policy,
                                                      Mapping)
@@ -1146,7 +1232,8 @@ class AggregationExecutor:
     def warmup(self, example_args: Optional[Tuple[Any, ...]] = None, *,
                kernel: Optional[str] = None,
                parent_shapes: Optional[Sequence[Any]] = None,
-               buckets: Optional[Sequence[int]] = None) -> None:
+               buckets: Optional[Sequence[int]] = None,
+               store: Optional[Any] = None) -> None:
         """AOT pre-compile every bucket size (amortized startup, like stream
         pre-allocation in CPPuddle).
 
@@ -1166,11 +1253,33 @@ class AggregationExecutor:
         just the steady wave's greedy decomposition — the caller's compile
         budget); default is the region's whole ladder.  Un-warmed buckets
         still compile lazily on first use.
+
+        ``store`` (DESIGN.md §13) points this warmup at a persistent
+        :class:`TuneStore` (path or instance), overriding the config's
+        ``tune_store`` knob: regions with a valid stored entry LOAD their
+        tuned state (ladder, chunk, cost tables, strategy selection)
+        instead of measuring it — zero measurement launches — and bucket
+        compiles become persistent-cache disk hits.
         """
         kernel = self._resolve_kernel(kernel)
+        if store is not None:
+            self._store = TuneStore.open(store)
+            if self._store is not None:
+                self._store.enable_compilation_cache()
 
         def aot_buckets(region):
-            return region.buckets if buckets is None else tuple(buckets)
+            want = region.buckets if buckets is None else tuple(buckets)
+            if region.stats.get("tuned_by") in ("store", "prior"):
+                # a restored/seeded ladder is what the drain will use —
+                # AOT ITS decomposition of the warmup wave too, or the
+                # warm process pays lazy compiles the cold one never did
+                # (callers pass ``buckets`` derived from the config
+                # ladder, which the installed ladder supersedes)
+                wave = region.warmup_wave
+                if wave:
+                    want = tuple(sorted(set(want).union(
+                        greedy_decomposition(wave, region.buckets))))
+            return want
 
         if parent_shapes is not None:
             parents = tuple(jax.ShapeDtypeStruct(tuple(p.shape), p.dtype)
@@ -1180,13 +1289,18 @@ class AggregationExecutor:
             region = self._region_for(kernel, task_specs)
             pk = tuple(tuple(p.shape) for p in parents)
             region._aot_parents[pk] = parents    # retune re-AOTs from these
+            restored = self._restore_region(region)
             if self._chunk_auto and not region.chunk_tuned:
                 self._tune_chunk(region, parents)
             n_parent = min(p.shape[0] for p in parents)
             region.warmup_wave = max(region.warmup_wave, n_parent)
+            if (self._prior_on and not restored
+                    and not region.cost.measured()
+                    and not region.cost.seeded()):
+                self._seed_prior(region, parents)
             for b in (b for b in aot_buckets(region) if b <= n_parent):
                 region.aot_ref(b, parents)
-            if self._cost_on:
+            if self._cost_on and not region.cost.seeded():
                 self._measure_region(region, aot_buckets(region),
                                      parents=parents)
             if example_args is None:
@@ -1194,6 +1308,7 @@ class AggregationExecutor:
         if example_args is None:
             raise ValueError("warmup needs example_args and/or parent_shapes")
         region = self._region_for(kernel, example_args)
+        restored = self._restore_region(region)
         specs = [jax.ShapeDtypeStruct(tuple(np.shape(a)),
                                       getattr(a, "dtype", None)
                                       or jnp.asarray(a).dtype)
@@ -1204,6 +1319,14 @@ class AggregationExecutor:
             pseudo = tuple(jax.ShapeDtypeStruct(
                 (max(region.buckets),) + s.shape, s.dtype) for s in specs)
             self._tune_chunk(region, pseudo)
+        if (self._prior_on and not restored and not region.cost.measured()
+                and not region.cost.seeded()):
+            # ring-staged regions seed against the ring capacity: the
+            # wave size is unknown before traffic, the cap bounds it
+            pseudo = tuple(jax.ShapeDtypeStruct(
+                (self.config.max_aggregated,) + s.shape, s.dtype)
+                for s in specs)
+            self._seed_prior(region, pseudo)
         if self._staging == "device":
             ring = region.ensure_ring(self.config.max_aggregated,
                                       example_args)
@@ -1211,7 +1334,7 @@ class AggregationExecutor:
                           for r in ring.buffers()]
             for b in aot_buckets(region):
                 region.aot_ring(b, ring_specs)
-            if self._cost_on:
+            if self._cost_on and not region.cost.seeded():
                 self._measure_region(region, aot_buckets(region),
                                      ring_specs=ring_specs)
         else:
@@ -1221,6 +1344,152 @@ class AggregationExecutor:
                     for s in specs)
                 region.compiled[("host", b)] = region.host_jit.lower(
                     *stacked).compile()
+
+    # -- persistent warm start (DESIGN.md §13) -----------------------------
+    def _restore_region(self, region: _Region) -> bool:
+        """Install the tune store's entry for this region, if one exists
+        for this exact ``(backend, device_kind)`` + signature + code
+        version: ladder (re-validated — a store is data, not trusted
+        code), inner chunk, every cost-model path's table (tagged
+        ``source="store"``, so ``_measure_region`` skips those buckets
+        and ``_measure_alt_paths`` skips its probes), the observed queue
+        histogram and the strategy selection.  The region comes up
+        ``tuned``; autotune re-arms only on evidence beyond the stored
+        histogram, exactly as after a live retune.  Any malformed field
+        warns and leaves the region cold — a broken store must never
+        crash (or mis-tune) the process it was meant to speed up."""
+        if region.stats.get("tuned_by") == "store":
+            return True                            # idempotent re-warmup
+        if self._store is None:
+            return False
+        entry = self._store.get(_backend_key(), region.signature.describe())
+        if not entry:
+            return False
+        try:
+            ladder = validate_ladder([int(b) for b in entry["ladder"]],
+                                     self.config.max_aggregated)
+            cost_tables = {
+                str(path): {int(b): float(t) for b, t in dict(table).items()}
+                for path, table in dict(entry.get("cost_model",
+                                                  {})).items()}
+            queue_hist = {
+                int(k): int(v)
+                for k, v in dict(entry.get("queue_hist", {})).items()}
+            chunk = entry.get("inner_chunk")
+            chunk = None if chunk is None else int(chunk)
+        except (KeyError, TypeError, ValueError) as err:
+            warnings.warn(
+                f"tune store entry for {region.signature.describe()} is "
+                f"unusable ({err}) — falling back to cold-start "
+                f"measurement", TuneStoreWarning, stacklevel=2)
+            return False
+        if chunk is not None:
+            region.chunk = chunk
+            region.chunk_tuned = True
+            region.stats["inner_chunk"] = chunk
+        for path, table in cost_tables.items():
+            for b, sec in sorted(table.items()):
+                region.cost.record(b, sec, path=path, source="store")
+        region.buckets = ladder
+        region.stats["ladder"] = list(ladder)
+        qh = region.stats["queue_hist"]
+        for k, c in queue_hist.items():
+            qh[k] = qh.get(k, 0) + c
+        region.warmup_wave = max(region.warmup_wave,
+                                 int(entry.get("warmup_wave", 0) or 0))
+        region.tuned = True
+        region._retuned_waves = region.waves
+        region._retuned_peak = max(queue_hist, default=0)
+        for k in ("selected_strategy", "strategy_costs"):
+            if k in entry:
+                region.stats[k] = entry[k]
+        if region.cost.measured():
+            region.stats["cost_model"] = region.cost.as_stats()
+        if len(region.cost.paths()) > 1:
+            region.stats["cost_model_paths"] = region.cost.as_stats_paths()
+        region.stats["tuned_by"] = "store"
+        region.stats["cost_sources"] = {
+            p: {b: s for b, s in t.items()}
+            for p, t in region.cost.sources().items()}
+        region.stats["warm_start"] = True
+        self.stats["warm_start"] = True
+        return True
+
+    def _seed_prior(self, region: _Region,
+                    parents: Sequence[Any]) -> None:
+        """First contact without a stopwatch (DESIGN.md §13): fill the
+        region's cost model with roofline estimates — every
+        drain-reachable candidate bucket on "s3", the probe widths on
+        "s2", the whole wave on "fused" — then derive a ladder from the
+        analytical table.  Entries are tagged ``source="prior"`` and the
+        region stays un-``tuned``: the normal autotune path re-derives
+        from real measurements as waves arrive and retires the seeds."""
+        wave = min(p.shape[0] for p in parents)
+        if not wave:
+            return
+        if self._prior is None:
+            self._prior = RooflinePrior(_backend_key())
+        task_specs = tuple(jax.ShapeDtypeStruct(tuple(p.shape[1:]), p.dtype)
+                           for p in parents)
+        cap = self.config.max_aggregated
+        for b in sorted(ladder_candidates({wave: 1}, cap)):
+            region.cost.seed_prior(
+                b, self._prior.predict(region.batched_fn, task_specs, b))
+        for w in s2_width_candidates(wave):
+            region.cost.seed_prior(
+                w, self._prior.predict(region.batched_fn, task_specs, w),
+                path="s2")
+        region.cost.seed_prior(
+            wave, self._prior.predict(region.batched_fn, task_specs, wave),
+            path="fused")
+        ladder = validate_ladder(
+            derive_ladder({wave: 1}, cap, self.config.compile_budget,
+                          region.cost), cap)
+        region.buckets = ladder
+        region.stats["ladder"] = list(ladder)
+        region.stats["tuned_by"] = "prior"
+        region.stats["cost_sources"] = {
+            p: dict(t) for p, t in region.cost.sources().items()}
+        region.stats["prior_hits"] = region.cost.prior_hits
+
+    def _persist_region(self, region: _Region,
+                        store: Optional[TuneStore] = None) -> None:
+        """Write one region's tuned state into the store (measured
+        medians only — priors are seeds, not knowledge worth saving)."""
+        store = store or self._store
+        entry: Dict[str, Any] = {
+            "cost_model": {path: {str(b): region.cost.time(b, path)
+                                  for b in region.cost.buckets(path)}
+                           for path in region.cost.paths()},
+            "ladder": [int(b) for b in region.buckets],
+            "inner_chunk": int(region.chunk),
+            "queue_hist": {str(k): int(v)
+                           for k, v in region.stats["queue_hist"].items()},
+            "warmup_wave": int(region.warmup_wave),
+            "tuned_by": region.stats.get("tuned_by", "measured"),
+        }
+        for k in ("selected_strategy", "strategy_costs"):
+            if k in region.stats:
+                entry[k] = region.stats[k]
+        store.put(_backend_key(), region.signature.describe(), entry)
+
+    def save_tuning(self, store: Optional[Any] = None) -> Optional[str]:
+        """Persist every tuned/measured region into the tune store (the
+        executor's own, or an explicit ``store`` path/instance) and
+        atomically write it to disk.  Returns the store file path, or
+        None when there is no store to write to.  The write-back half of
+        the §13 contract: ``warmup(store=...)`` loads, this saves."""
+        target = TuneStore.open(store) if store is not None else self._store
+        if target is None:
+            return None
+        wrote = False
+        for region in self._regions.values():
+            if region.tuned or region.cost.measured():
+                self._persist_region(region, target)
+                wrote = True
+        if wrote or len(target) == 0:
+            target.save()
+        return target.path
 
     def _tune_chunk(self, region: _Region, parents: Sequence[Any],
                     force: bool = False) -> None:
@@ -1273,6 +1542,7 @@ class AggregationExecutor:
             # min-of-3 guards the choice against scheduler hiccups — the
             # memo pins it process-wide, so one noisy sample must not
             # lock in a pessimal chunk (~3.5x between best and worst here)
+            region.stats["measurement_launches"] += 4   # warm + 3 timed
             t = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
@@ -1326,6 +1596,7 @@ class AggregationExecutor:
                 continue
             fn = program(b)
             jax.block_until_ready(fn(start, *concrete))        # warm call
+            region.stats["measurement_launches"] += 1 + self._cost_samples
             for _ in range(self._cost_samples):
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(start, *concrete))
@@ -1344,22 +1615,36 @@ class AggregationExecutor:
         times instead of guessing: the s2 donated scatter per coalesce
         width, and the fused one-launch whole-wave body.  Measured once
         per region; the s2 widths probed are 1 plus powers of two up to
-        the wave size."""
+        the wave size.
+
+        Families with an EXPLICIT route in ``family_strategies`` skip the
+        probes whose result nothing would consult — each is a full XLA
+        compile.  An explicit ``"s2"`` route still measures the s2 width
+        table (the s2 strategy sizes its scatter ring from it); explicit
+        ``"s3"`` / ``"fused"`` routes probe nothing here, and only
+        ``"auto"`` (the default) measures every path for
+        ``select_strategy`` to compare."""
         wave = min(c.shape[0] for c in concrete)
         if not wave:
             return
-        if not region.cost.measured("s2"):
+        route = resolve_family_option(
+            getattr(self.config, "family_strategies", None),
+            region.signature.kernel, "auto")
+        if route in ("auto", "s2") and not region.cost.measured("s2"):
             widths = measure_s2_widths(region.batched_fn, concrete,
                                        s2_width_candidates(wave),
                                        samples=self._cost_samples)
+            region.stats["measurement_launches"] += (
+                len(widths) * (1 + self._cost_samples))
             for w, t in widths.items():
                 region.cost.record(w, t, path="s2")
-        if not region.cost.measured("fused"):
+        if route == "auto" and not region.cost.measured("fused"):
             fn = jax.jit(region.batched_fn)
             try:
                 jax.block_until_ready(fn(*concrete))           # warm call
             except (TypeError, ValueError):
                 return                    # body rejects the flat whole wave
+            region.stats["measurement_launches"] += 1 + self._cost_samples
             for _ in range(self._cost_samples):
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(*concrete))
@@ -1378,7 +1663,7 @@ class AggregationExecutor:
         if not wave:
             return {}
         out: Dict[str, Any] = {}
-        if region.cost.measured("s3"):
+        if region.cost.has_data("s3"):
             ladder = [b for b in region.buckets
                       if b not in region.bad_buckets] or [1]
             out["s3"] = round(region.cost.predict_seq(
@@ -1387,7 +1672,7 @@ class AggregationExecutor:
         if s2 is not None:
             out["s2"] = round(s2[1] * 1e3, 4)
             out["s2_width"] = s2[0]
-        if region.cost.measured("fused"):
+        if region.cost.has_data("fused"):
             out["fused"] = round(region.cost.predict(wave, "fused") * 1e3, 4)
         return out
 
@@ -1974,6 +2259,7 @@ class AggregationExecutor:
         """A wave ended (queue drained to zero): record its peak queue
         length and, past the warmup, re-derive the region's ladder."""
         region._wave_submitted = 0    # wave-relative task ids restart
+        region.stats["prior_hits"] = region.cost.prior_hits
         peak = region._wave_peak
         if peak:
             qh = region.stats["queue_hist"]
@@ -2022,28 +2308,40 @@ class AggregationExecutor:
                                self.config.max_aggregated,
                                self.config.compile_budget, cost_model)
         region.tuned = True
-        region.stats["tuned_by"] = ("cost_model" if cost_model is not None
+        region.stats["tuned_by"] = ("measured" if cost_model is not None
                                     else "launches")
-        if ladder == region.buckets and not chunk_changed:
-            return
-        region.buckets = ladder
-        region.stats["ladder"] = list(ladder)
-        # AOT only the buckets the observed waves will actually drain
-        # through under the new ladder (the compile budget, honored)
-        used = set()
-        for k in region.stats["queue_hist"]:
-            used.update(greedy_decomposition(k, ladder))
-        if region.ring is not None:       # ring-staged regions retune too
-            ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
-                          for r in region.ring.buffers()]
-            for b in sorted(used):
-                region.aot_ring(b, ring_specs)
-        # (host staging keeps lazy per-shape jit — it is the measurable
-        # seed baseline, not a tuned hot path)
-        for parents in region._aot_parents.values():
-            n_parent = min(p.shape[0] for p in parents)
-            for b in (b for b in sorted(used) if b <= n_parent):
-                region.aot_ref(b, parents)
+        if cost_model is not None:
+            # real measurements just landed: retire the analytical seeds
+            # (DESIGN.md §13 — priors are fully replaced by retune)
+            region.cost.clear_priors()
+            region.stats["cost_sources"] = {
+                p: dict(t) for p, t in region.cost.sources().items()}
+        region.stats["prior_hits"] = region.cost.prior_hits
+        if ladder != region.buckets or chunk_changed:
+            region.buckets = ladder
+            region.stats["ladder"] = list(ladder)
+            # AOT only the buckets the observed waves will actually drain
+            # through under the new ladder (the compile budget, honored)
+            used = set()
+            for k in region.stats["queue_hist"]:
+                used.update(greedy_decomposition(k, ladder))
+            if region.ring is not None:   # ring-staged regions retune too
+                ring_specs = [jax.ShapeDtypeStruct(r.shape, r.dtype)
+                              for r in region.ring.buffers()]
+                for b in sorted(used):
+                    region.aot_ring(b, ring_specs)
+            # (host staging keeps lazy per-shape jit — it is the
+            # measurable seed baseline, not a tuned hot path)
+            for parents in region._aot_parents.values():
+                n_parent = min(p.shape[0] for p in parents)
+                for b in (b for b in sorted(used) if b <= n_parent):
+                    region.aot_ref(b, parents)
+        # write-back half of the warm-start contract: the tuned state a
+        # retune just produced is exactly what process two wants to load
+        if self._store is not None and (region.cost.measured()
+                                        or region.tuned):
+            self._persist_region(region)
+            self._store.save()
 
     def _resweep_chunk(self, region: _Region) -> bool:
         """Retune-time ``inner_chunk="auto"`` re-sweep (supersedes the §9

@@ -133,7 +133,8 @@ class StrategyRunner:
         return self.pool.launches_by_family
 
     # -- warmup ------------------------------------------------------------
-    def warmup(self, wave_only: bool = False) -> None:
+    def warmup(self, wave_only: bool = False,
+               store: Optional[Any] = None) -> None:
         """AOT pre-compile every family's gather/prefix buckets from the
         parent shapes the scenario's submission waves will reference
         (shape-agreeing waves are deduplicated).
@@ -143,6 +144,11 @@ class StrategyRunner:
         the benchmark's compile budget; other buckets compile lazily.  When
         the epilogue-fused stage path is active, only the stage families
         are warmed — the plain families never launch on that path.
+
+        ``store`` (DESIGN.md §13) passes a persistent tune store through
+        to the executor: families with a valid stored entry load their
+        tuned state instead of measuring it, and bucket compiles become
+        persistent-cache disk hits.
         """
         if self._agg_exec is None:
             return
@@ -164,7 +170,15 @@ class StrategyRunner:
                 buckets = tuple(sorted(set(greedy_decomposition(wave,
                                                                 ladder))))
             self._agg_exec.warmup(kernel=kernel, parent_shapes=parent_specs,
-                                  buckets=buckets)
+                                  buckets=buckets, store=store)
+
+    def save_tuning(self, store: Optional[Any] = None) -> Optional[str]:
+        """Persist every tuned family's state into the tune store (the
+        config's, or an explicit path/instance).  No-op (returns None)
+        for executor-less strategies or when no store is configured."""
+        if self._agg_exec is None:
+            return None
+        return self._agg_exec.save_tuning(store)
 
     # -- one solver iteration ----------------------------------------------
     def rhs(self, state):

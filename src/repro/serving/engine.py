@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import AggregationConfig
 from repro.core.faults import FaultInjector, poison_slots
+from repro.core.tunestore import TuneStore
 from repro.data.pipeline import length_bucket
 from repro.models import model as model_mod
 
@@ -60,6 +61,14 @@ class ServingEngine:
             raise ValueError(
                 f"guard={self.guard!r} — expected 'off' or 'finite'")
         self._injector = fault_injector
+        # persistent warm start (DESIGN.md §13): the engine's per-bucket
+        # decode programs are exactly the restart-latency hot spot — with
+        # a tune store configured, point JAX's persistent compilation
+        # cache at it so a restarted server's bucket compiles (and the
+        # prefill programs) are disk hits instead of fresh XLA runs
+        self._store = TuneStore.open(getattr(self.agg, "tune_store", None))
+        warm = (self._store.enable_compilation_cache()
+                if self._store is not None else False)
         self.buckets = tuple(b for b in self.agg.bucket_sizes()
                              if b <= max_batch) or (max_batch,)
 
@@ -87,6 +96,9 @@ class ServingEngine:
         self._decode = {}                        # bucket -> jitted fn
         self._step_no = 0                        # launch counter ("wave" id)
         self.stats = {"launches": 0, "tokens": 0, "aggregated_hist": {},
+                      "warm_start": warm,
+                      "tune_store": (self._store.root
+                                     if self._store is not None else None),
                       "faults": {"trips": 0, "evicted": 0}}
 
     def _stub_batch(self, b: Optional[int] = None):

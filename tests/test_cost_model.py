@@ -13,7 +13,7 @@ Invariants pinned here:
   extrapolates under the largest one;
 * with ``cost_model=True`` the executor times the drain-reachable buckets
   (``stats["regions"][fam]["cost_model"]``) and the retuned ladder is the
-  measured-fastest plan (``tuned_by == "cost_model"``), with the
+  measured-fastest plan (``tuned_by == "measured"``), with the
   ``inner_chunk`` memo keyed by backend so a timed choice never leaks
   across devices;
 * ``executor.retune()`` is a NO-OP for regions without new waves since
@@ -157,7 +157,7 @@ def test_cost_model_retune_measures_and_tunes():
         fut = exe.submit_range((parent,), 0, 16)
         exe.flush()
     region = next(iter(exe.regions.values()))
-    assert region.stats["tuned_by"] == "cost_model"
+    assert region.stats["tuned_by"] == "measured"
     table = region.stats["cost_model"]
     assert table and all(ms >= 0 for ms in table.values())
     # every drain-reachable candidate of the observed waves was timed
